@@ -1,0 +1,29 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+# default subsample so `python -m benchmarks.run` finishes on 1 CPU core;
+# crank BENCH_SCALE up for larger runs.
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (blocks on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float | None, derived: str):
+    us = f"{seconds * 1e6:.1f}" if seconds is not None else ""
+    print(f"{name},{us},{derived}")

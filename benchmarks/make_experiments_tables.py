@@ -1,0 +1,89 @@
+"""Generate the §Dry-run and §Roofline markdown tables from results/.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables > tables.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+ARCH_ORDER = ["glm4-9b", "llama3.2-3b", "minitron-4b", "phi3-medium-14b",
+              "moonshot-v1-16b-a3b", "deepseek-v2-236b", "qwen2-vl-7b",
+              "whisper-tiny", "rwkv6-7b", "recurrentgemma-2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(mesh: str):
+    cells = {}
+    for f in RESULTS.glob("dryrun_*.json"):
+        d = json.loads(f.read_text())
+        if d.get("mesh") != mesh:
+            continue
+        key = (d.get("arch", d.get("cell", "?")), d.get("shape", "-"))
+        cells[key] = d
+    return cells
+
+
+def dryrun_table(mesh: str):
+    cells = _load(mesh)
+    print(f"\n### Dry-run — {mesh} mesh "
+          f"({'512' if mesh == 'multi' else '256'} chips)\n")
+    print("| arch | shape | status | compile | params+opt+state GiB/dev |"
+          " temp GiB/dev | HLO GFLOP/dev | coll GiB/dev | top collectives |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    keys = [(a, s) for a in ARCH_ORDER for s in SHAPE_ORDER]
+    keys += [(k, s) for (k, s) in cells if k not in ARCH_ORDER]
+    for key in keys:
+        d = cells.get(key)
+        if d is None:
+            continue
+        a, s = key
+        st = str(d.get("status", "?"))
+        if st.startswith("SKIP"):
+            print(f"| {a} | {s} | SKIP(full-attn) | | | | | | |")
+            continue
+        if st != "OK":
+            print(f"| {a} | {s} | FAIL | | | | | | {st[:60]} |")
+            continue
+        mem = d.get("memory", {})
+        ta = d.get("trip_aware", {})
+        by = ta.get("by_kind", {})
+        top = ", ".join(f"{k.split('-')[-1]} {v/2**30:.1f}G"
+                        for k, v in sorted(by.items(),
+                                           key=lambda kv: -kv[1])[:2])
+        print(f"| {a} | {s} | OK | {d.get('seconds_compile', '')}s "
+              f"| {mem.get('argument_size_in_bytes', 0)/2**30:.2f} "
+              f"| {mem.get('temp_size_in_bytes', 0)/2**30:.2f} "
+              f"| {ta.get('flops', 0)/1e9:.0f} "
+              f"| {ta.get('collective_bytes', 0)/2**30:.2f} | {top} |")
+
+
+def roofline_table(mesh: str = "single"):
+    cells = _load(mesh)
+    print(f"\n### Roofline — {mesh} mesh, TPU v5e targets "
+          "(197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    print("| cell | t_compute s | t_memory s | t_collective s | bound |"
+          " useful | MFU bound |")
+    print("|---|---|---|---|---|---|---|")
+    keys = [(a, s) for a in ARCH_ORDER for s in SHAPE_ORDER]
+    keys += [(k, s) for (k, s) in cells if k not in ARCH_ORDER]
+    for key in keys:
+        d = cells.get(key)
+        if d is None or "roofline" not in d:
+            if d is not None and str(d.get("status", "")).startswith("SKIP"):
+                print(f"| {key[0]} × {key[1]} | — | — | — | "
+                      "SKIP(full-attn) | | |")
+            continue
+        r = d["roofline"]
+        print(f"| {key[0]} × {key[1]} | {r['t_compute']:.4f} "
+              f"| {r['t_memory']:.4f} | {r['t_collective']:.4f} "
+              f"| {r['bottleneck']} | {r['useful']:.2f} "
+              f"| {r['mfu_bound']:.3f} |")
+
+
+if __name__ == "__main__":
+    for mesh in ("single", "multi"):
+        dryrun_table(mesh)
+    roofline_table("single")

@@ -1,0 +1,57 @@
+"""§Roofline report: aggregate results/dryrun_*.json into the table.
+
+Reads every dry-run artifact (launch/dryrun.py writes one JSON per cell)
+and prints the three roofline terms + bottleneck + useful-compute fraction
+per (arch x shape x mesh). Used to generate EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+from repro.utils.roofline import format_table
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def load_rows(mesh: str = "single"):
+    rows = []
+    skips = []
+    for f in sorted(RESULTS.glob("dryrun_*.json")):
+        data = json.loads(f.read_text())
+        if data.get("mesh") != mesh:
+            continue
+        status = str(data.get("status", ""))
+        name = f"{data.get('arch', data.get('cell'))} x {data['shape']}" \
+            if "shape" in data else str(data.get("cell"))
+        if status.startswith("SKIP"):
+            skips.append((name, status))
+            continue
+        if status != "OK" or "roofline" not in data:
+            skips.append((name, status or "missing"))
+            continue
+        row = dict(data["roofline"])
+        row["name"] = name
+        rows.append(row)
+    return rows, skips
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows, skips = load_rows(mesh)
+        if not rows:
+            emit(f"roofline/{mesh}", None, "no dry-run artifacts found")
+            continue
+        print(f"# roofline ({mesh}-pod mesh)")
+        print(format_table(rows))
+        for name, status in skips:
+            print(f"{name:42s} {status}")
+        for r in rows:
+            emit(f"roofline/{mesh}/{r['name'].replace(' ', '')}", None,
+                 f"bound={r['bottleneck']} step={r['step_time']:.4f}s "
+                 f"mfu_bound={r['mfu_bound']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Default sizes finish on one
+CPU core; BENCH_SCALE=10 approaches the paper's regimes.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig4 table3 # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (fig4_mvm_error, fig6_mvm_speed, roofline_report,
+                        table2_uci, table3_sparsity, table4_cg)
+
+MODULES = {
+    "fig4": fig4_mvm_error,
+    "table3": table3_sparsity,
+    "fig6": fig6_mvm_speed,
+    "table4": table4_cg,
+    "table2": table2_uci,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+    for key in wanted:
+        mod = MODULES[key]
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"{key}/TOTAL,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:  # keep the suite going
+            traceback.print_exc()
+            print(f"{key}/TOTAL,,ERROR {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Table 2: test RMSE / NLL across methods on the (synthetic) UCI suite.
+
+Methods: Exact GP (subsampled, the Wang et al. 2019 role), SGPR (m=512),
+SKIP, Simplex-GP. The paper's claims checked here:
+  * Simplex-GP beats SKIP on RMSE,
+  * Simplex-GP is competitive with SGPR and close to Exact.
+Datasets are subsampled for the CPU host (BENCH_SCALE scales them up).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SCALE, emit
+from repro.core import kernels_math as km
+from repro.core.exact import ExactGP
+from repro.core.sgpr import SGPR, select_inducing
+from repro.core.skip import skip_operator
+from repro.gp import (GPParams, SimplexGP, SimplexGPConfig, fit, nll,
+                      posterior, rmse)
+from repro.gp.models import softplus
+from repro.data.synthetic_uci import load
+from repro.optim import Adam
+from repro.solvers import cg
+
+DATASETS = {"precipitation": 0.004, "keggdirected": 0.05, "protein": 0.05,
+            "elevators": 0.15}
+EPOCHS = 8
+
+
+def _fit_exact(ds, n_max=800):
+    eg = ExactGP(km.MATERN32)
+    x = jnp.asarray(ds.x_train[:n_max])
+    y = jnp.asarray(ds.y_train[:n_max])
+    p = GPParams.init(x.shape[1], noise=0.1)
+    opt = Adam(learning_rate=0.1)
+    s = opt.init(p)
+
+    @jax.jit
+    def step(p, s):
+        def neg(p):
+            ls, os_, nz = (softplus(p.raw_lengthscale),
+                           softplus(p.raw_outputscale),
+                           softplus(p.raw_noise) + 1e-4)
+            return -eg.mll(x, y, lengthscale=ls, outputscale=os_, noise=nz)
+        return opt.update(jax.grad(neg)(p), s, p)
+
+    for _ in range(EPOCHS):
+        p, s = step(p, s)
+    ls, os_, nz = (softplus(p.raw_lengthscale),
+                   softplus(p.raw_outputscale),
+                   softplus(p.raw_noise) + 1e-4)
+    post = eg.posterior(x, y, jnp.asarray(ds.x_test), lengthscale=ls,
+                        outputscale=os_, noise=nz)
+    ytest = jnp.asarray(ds.y_test)
+    r = float(jnp.sqrt(jnp.mean((post.mean - ytest) ** 2)))
+    s2 = post.var + nz
+    n = float(jnp.mean(0.5 * jnp.log(2 * jnp.pi * s2)
+                       + 0.5 * (ytest - post.mean) ** 2 / s2))
+    return r, n
+
+
+def _fit_sgpr(ds, m=512):
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train)
+    sg = SGPR(km.MATERN32, select_inducing(jax.random.PRNGKey(0), x,
+                                           min(m, x.shape[0] // 2)))
+    p = GPParams.init(x.shape[1], noise=0.1)
+    opt = Adam(learning_rate=0.1)
+    s = opt.init(p)
+
+    @jax.jit
+    def step(p, s):
+        def neg(p):
+            ls, os_, nz = (softplus(p.raw_lengthscale),
+                           softplus(p.raw_outputscale),
+                           softplus(p.raw_noise) + 1e-4)
+            return -sg.mll(x, y, lengthscale=ls, outputscale=os_, noise=nz)
+        return opt.update(jax.grad(neg)(p), s, p)
+
+    for _ in range(EPOCHS):
+        p, s = step(p, s)
+    ls, os_, nz = (softplus(p.raw_lengthscale),
+                   softplus(p.raw_outputscale),
+                   softplus(p.raw_noise) + 1e-4)
+    mean, var = sg.posterior(x, y, jnp.asarray(ds.x_test), lengthscale=ls,
+                             outputscale=os_, noise=nz)
+    ytest = jnp.asarray(ds.y_test)
+    r = float(jnp.sqrt(jnp.mean((mean - ytest) ** 2)))
+    s2 = var + nz
+    n = float(jnp.mean(0.5 * jnp.log(2 * jnp.pi * s2)
+                       + 0.5 * (ytest - mean) ** 2 / s2))
+    return r, n
+
+
+def _fit_skip(ds, rank=24):
+    """SKIP posterior mean via CG on (R R^T + s2 I); fixed unit ls."""
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train)
+    op = skip_operator(km.MATERN32, x, grid_size=48, rank=rank)
+    s2 = jnp.float32(0.1)
+    sol, _ = cg(lambda v: op.mvm(v) + s2 * v, y[:, None], tol=1e-3,
+                max_iters=200)
+    xt = jnp.asarray(ds.x_test)
+    kxs = km.gram(km.MATERN32, xt, x)
+    mean = kxs @ sol[:, 0]
+    ytest = jnp.asarray(ds.y_test)
+    r = float(jnp.sqrt(jnp.mean((mean - ytest) ** 2)))
+    return r, float("nan")
+
+
+def _fit_simplex(ds):
+    model = SimplexGP(SimplexGPConfig(kernel="matern32", order=1,
+                                      max_cg_iters=40, num_probes=6,
+                                      grad_mode="autodiff",
+                                      max_lanczos_iters=20))
+    res = fit(model, jnp.asarray(ds.x_train), jnp.asarray(ds.y_train),
+              x_val=jnp.asarray(ds.x_val), y_val=jnp.asarray(ds.y_val),
+              epochs=EPOCHS, lr=0.1, patience=EPOCHS)
+    post = posterior(model, res.best_params, jnp.asarray(ds.x_train),
+                     jnp.asarray(ds.y_train), jnp.asarray(ds.x_test),
+                     key=jax.random.PRNGKey(1))
+    ytest = jnp.asarray(ds.y_test)
+    r = float(rmse(post, ytest))
+    n = float(nll(post, model.constrained(res.best_params)[2], ytest))
+    return r, n
+
+
+def main():
+    for name, frac in DATASETS.items():
+        ds = load(name, scale=frac * SCALE)
+        rows = {}
+        for label, fitter in [("exact", _fit_exact), ("sgpr", _fit_sgpr),
+                              ("skip", _fit_skip),
+                              ("simplexgp", _fit_simplex)]:
+            t0 = time.time()
+            try:
+                r, n = fitter(ds)
+                rows[label] = r
+                emit(f"table2/{name}/{label}", time.time() - t0,
+                     f"rmse={r:.3f} nll={n:.3f} n={ds.n} d={ds.d}")
+            except Exception as e:  # pragma: no cover
+                emit(f"table2/{name}/{label}", None, f"ERROR {e}")
+        if {"simplexgp", "skip"} <= rows.keys():
+            emit(f"table2/{name}/claim", None,
+                 f"simplex_beats_skip={rows['simplexgp'] < rows['skip']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Table 4: training-step cost at CG tolerance 1e-2 / 1e-4 vs RR-CG.
+
+The paper's point: tol 1e-4 stabilizes training but costs ~5-8x; RR-CG
+recovers most of the speed while remaining unbiased. On the static-shape
+TPU formulation we report BOTH wall seconds (this host) and the effective
+MVM count a dynamic backend would execute (solvers/rrcg.py docstring).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SCALE, emit
+from repro.data.synthetic_uci import load
+from repro.gp import GPParams, SimplexGP, SimplexGPConfig
+from repro.gp.mll import mll_value_and_grad
+from repro.solvers import expected_iters
+
+DATASETS = {"precipitation": 0.004, "protein": 0.05, "elevators": 0.15}
+
+
+def one_step_seconds(model, params, x, y, *, tol, use_rrcg=False):
+    key = jax.random.PRNGKey(0)
+    fn = jax.jit(lambda p, k: mll_value_and_grad(
+        model, p, x, y, k, tol=tol, use_rrcg=use_rrcg).mll)
+    fn(params, key).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    fn(params, jax.random.PRNGKey(1)).block_until_ready()
+    return time.perf_counter() - t0
+
+
+def main():
+    for name, frac in DATASETS.items():
+        ds = load(name, scale=frac * SCALE)
+        x = jnp.asarray(ds.x_train)
+        y = jnp.asarray(ds.y_train)
+        params = GPParams.init(x.shape[1])
+        for label, iters, tol, rr in [
+                ("cg_1e-2", 30, 1e-2, False),
+                ("cg_1e-4", 150, 1e-4, False),
+                ("rrcg", 150, 1e-8, True)]:
+            model = SimplexGP(SimplexGPConfig(
+                kernel="matern32", max_cg_iters=iters, num_probes=4,
+                max_lanczos_iters=10))
+            s = one_step_seconds(model, params, x, y, tol=tol,
+                                 use_rrcg=rr)
+            eff = (expected_iters(iters // 4, iters)
+                   if rr else iters)
+            emit(f"table4/{name}/{label}", s,
+                 f"effective_mvm_iters={eff:.0f} n={x.shape[0]}")
+
+
+if __name__ == "__main__":
+    main()

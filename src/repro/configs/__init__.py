@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCH_IDS, get, smoke
+
+__all__ = ["ARCH_IDS", "get", "smoke"]

@@ -1,0 +1,17 @@
+"""DeepSeek-V2-236B [moe]: 60L, d=5120, 128H MLA (kv_lora=512),
+expert ff=1536, vocab=102400, 2 shared + 160 routed top-6.
+(arXiv:2405.04434). First layer dense (ff=12288) per the paper."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b", family="moe",
+    num_layers=60, d_model=5120, num_heads=128, num_kv_heads=128,
+    d_ff=12288,  # leading dense layer(s)
+    vocab_size=102400, rope_theta=10_000.0,
+    moe=True, num_experts=160, moe_top_k=6, moe_d_ff=1536,
+    num_shared_experts=2, first_k_dense=1,
+    mla=True, kv_lora_rank=512, q_lora_rank=1536,
+    qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
+    head_dim=192,  # qk_nope + qk_rope
+    mlp_kind="swiglu", tie_embeddings=True,
+)

@@ -1,0 +1,12 @@
+"""GLM-4-9B [dense]: 40L, d=4096, 32H GQA kv=2, ff=13696, vocab=151552.
+
+RoPE + GQA + SwiGLU decoder-only LM. [hf:THUDM/glm-4-9b; hf]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b", family="dense",
+    num_layers=40, d_model=4096, num_heads=32, num_kv_heads=2,
+    d_ff=13696, vocab_size=151552, rope_theta=10_000.0,
+    mlp_kind="swiglu", tie_embeddings=True,
+)

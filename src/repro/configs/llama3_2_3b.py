@@ -1,0 +1,13 @@
+"""Llama-3.2-3B [dense]: 28L, d=3072, 24H GQA kv=8, ff=8192, vocab=128256.
+
+Small llama3: RoPE (theta 5e5), SwiGLU, tied embeddings.
+[hf:meta-llama/Llama-3.2-1B; unverified]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b", family="dense",
+    num_layers=28, d_model=3072, num_heads=24, num_kv_heads=8,
+    d_ff=8192, vocab_size=128256, rope_theta=500_000.0,
+    mlp_kind="swiglu", tie_embeddings=True,
+)

@@ -1,0 +1,12 @@
+"""Minitron-4B [dense]: 32L, d=3072, 24H GQA kv=8, ff=9216, vocab=256000.
+
+Pruned Nemotron (arXiv:2407.14679): squared-ReLU non-gated MLP, RoPE.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b", family="dense",
+    num_layers=32, d_model=3072, num_heads=24, num_kv_heads=8,
+    d_ff=9216, vocab_size=256000, rope_theta=10_000.0,
+    mlp_kind="relu2", tie_embeddings=True,
+)

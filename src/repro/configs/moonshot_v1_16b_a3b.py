@@ -1,0 +1,12 @@
+"""Moonlight-16B-A3B [moe]: 48L, d=2048, 16H MHA, expert ff=1408,
+vocab=163840, 64 experts top-6. [hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    num_layers=48, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=163840, rope_theta=50_000.0,
+    moe=True, num_experts=64, moe_top_k=6, moe_d_ff=1408,
+    num_shared_experts=0, first_k_dense=0,
+    mlp_kind="swiglu", tie_embeddings=True,
+)

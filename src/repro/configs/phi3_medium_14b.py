@@ -1,0 +1,10 @@
+"""Phi-3-medium-14B [dense]: 40L, d=5120, 40H GQA kv=10, ff=17920,
+vocab=100352. RoPE + SwiGLU + GQA (arXiv:2404.14219)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b", family="dense",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=10,
+    d_ff=17920, vocab_size=100352, rope_theta=10_000.0,
+    mlp_kind="swiglu", tie_embeddings=True,
+)

@@ -1,0 +1,14 @@
+"""Qwen2-VL-7B [vlm]: 28L, d=3584, 28H GQA kv=4, ff=18944, vocab=152064.
+
+M-RoPE with (t, h, w) sections (16, 24, 24) over head_dim/2 = 64; dynamic-
+resolution vision frontend is a STUB — input_specs provides precomputed
+patch embeddings. (arXiv:2409.12191)"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4,
+    d_ff=18944, vocab_size=152064, rope_theta=1_000_000.0,
+    m_rope_sections=(16, 24, 24), num_vision_tokens=1024,
+    mlp_kind="swiglu", tie_embeddings=True,
+)

@@ -1,0 +1,14 @@
+"""RecurrentGemma-2B [hybrid]: 26L, d=2560, 10H local-MQA kv=1, ff=7680,
+vocab=256000. RG-LRU + local attention (window 2048) in a (rec, rec,
+attn) pattern — 8 scanned periods + 2 trailing recurrent layers.
+(arXiv:2402.19427)"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1,
+    head_dim=256, d_ff=7680, vocab_size=256000,
+    block_pattern=("rec", "rec", "attn"), local_window=2048,
+    lru_width=2560, rglru_conv_width=4,
+    mlp_kind="swiglu", tie_embeddings=True,
+)

@@ -1,0 +1,72 @@
+"""Architecture registry: ``--arch <id>`` lookup + reduced smoke configs.
+
+``get(name)`` returns the full published config; ``smoke(name)`` returns a
+reduced config of the same family (small widths, few layers/experts, tiny
+vocab) that runs a forward/train step on CPU in seconds — the full configs
+are only ever lowered via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "glm4-9b": "glm4_9b",
+    "llama3.2-3b": "llama3_2_3b",
+    "minitron-4b": "minitron_4b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-tiny": "whisper_tiny",
+    "rwkv6-7b": "rwkv6_7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        module = _MODULES[name]
+    except KeyError:
+        raise ValueError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{module}").CONFIG
+
+
+def smoke(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    cfg = get(name)
+    kv = min(cfg.num_kv_heads, 2)
+    heads = max(4, kv)
+    upd: dict = dict(
+        num_layers=3 if cfg.family == "hybrid" else 2,
+        d_model=128, num_heads=heads, num_kv_heads=kv,
+        d_ff=256, vocab_size=512, vocab_pad_multiple=64,
+        dtype=jnp.float32, remat=False,
+        head_dim=32,
+    )
+    if cfg.moe:
+        # generous capacity so smoke tests are drop-free deterministic
+        # (the full configs keep the paper-typical 1.25)
+        upd.update(num_experts=8, moe_top_k=2, moe_d_ff=64,
+                   num_shared_experts=min(cfg.num_shared_experts, 1),
+                   first_k_dense=min(cfg.first_k_dense, 1),
+                   capacity_factor=8.0)
+    if cfg.mla:
+        upd.update(kv_lora_rank=32, q_lora_rank=48, qk_nope_head_dim=32,
+                   qk_rope_head_dim=16, v_head_dim=32, head_dim=48)
+    if cfg.family == "vlm":
+        upd.update(m_rope_sections=(4, 6, 6), num_vision_tokens=8)
+    if cfg.is_encdec:
+        upd.update(encoder_layers=2, encoder_frames=16)
+    if cfg.family == "ssm":
+        upd.update(rwkv_head_dim=32, rwkv_lora_rank=16, ssm_chunk=8,
+                   num_heads=4, num_kv_heads=4)
+    if cfg.family == "hybrid":
+        upd.update(local_window=16, lru_width=128, head_dim=32)
+    return dataclasses.replace(cfg, **upd)

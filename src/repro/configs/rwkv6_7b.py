@@ -1,0 +1,12 @@
+"""RWKV-6 "Finch" 7B [ssm]: 32L, d=4096 (attn-free), ff=14336,
+vocab=65536. Data-dependent decay, 64 heads of dim 64, chunked-parallel
+time mixing (arXiv:2404.05892)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="ssm",
+    num_layers=32, d_model=4096, num_heads=64, num_kv_heads=64,
+    d_ff=14336, vocab_size=65536,
+    rwkv_head_dim=64, rwkv_lora_rank=64, ssm_chunk=64,
+    mlp_kind="relu2", tie_embeddings=True,
+)

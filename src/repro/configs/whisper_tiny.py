@@ -1,0 +1,14 @@
+"""Whisper-tiny [audio]: enc-dec 4L+4L, d=384, 6H MHA, ff=1536,
+vocab=51865. Conv/mel frontend is a STUB (input_specs feeds frame
+embeddings). Sinusoidal positions both sides (adaptation: the real 448-
+entry learned decoder table cannot index the assigned 32k decode shape).
+(arXiv:2212.04356)"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="audio",
+    num_layers=4, d_model=384, num_heads=6, num_kv_heads=6,
+    d_ff=1536, vocab_size=51865,
+    encoder_layers=4, encoder_frames=1500, cross_attention=True,
+    mlp_kind="gelu", tie_embeddings=True,
+)

@@ -1,0 +1,80 @@
+"""Exact GP baseline (paper Table 2 "Exact GP" column; §5.1's KeOps role).
+
+Two pieces:
+  * ``chunked_mvm`` — a memory-nimble exact MVM that never materializes
+    K_XX (rows are produced block-by-block inside a ``lax.map``). This is
+    the same role KeOps plays in the paper: O(n^2 d) compute, O(n b) memory.
+    The Pallas version (kernels/exact_mvm) is the TPU-tiled equivalent; this
+    is its pure-jnp reference and the CPU fallback.
+  * ``ExactGP`` — Cholesky-based exact inference for small n (tests, and the
+    Table 2 exact column via subsampling, like Wang et al. 2019 report).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernels_math as km
+from repro.core.kernels_math import KernelProfile
+
+Array = jax.Array
+
+
+def chunked_mvm(profile: KernelProfile, x: Array, v: Array, *,
+                lengthscale: Array | float = 1.0,
+                outputscale: Array | float = 1.0,
+                block: int = 1024) -> Array:
+    """v -> K_XX v without materializing K (KeOps-analogue)."""
+    n, d = x.shape
+    ls = jnp.asarray(lengthscale)
+    z = x / ls
+    pad = (-n) % block
+    zp = jnp.pad(z, ((0, pad), (0, 0)))
+    blocks = zp.reshape(-1, block, d)
+
+    def one_block(zb):
+        tau = jnp.sqrt(km.pairwise_sqdist(zb, z) + 1e-30)
+        return profile.k(tau) @ v  # (block, c)
+
+    out = jax.lax.map(one_block, blocks).reshape(-1, v.shape[1])[:n]
+    return outputscale * out
+
+
+class ExactPosterior(NamedTuple):
+    mean: Array
+    var: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactGP:
+    """Small-n Cholesky GP — the oracle for every approximation here."""
+
+    profile: KernelProfile
+
+    def _khat(self, x, lengthscale, outputscale, noise):
+        k = km.gram(self.profile, x, x, lengthscale, outputscale)
+        return k + (noise + 1e-6) * jnp.eye(x.shape[0], dtype=x.dtype)
+
+    def mll(self, x: Array, y: Array, *, lengthscale, outputscale,
+            noise) -> Array:
+        n = x.shape[0]
+        khat = self._khat(x, lengthscale, outputscale, noise)
+        chol = jnp.linalg.cholesky(khat)
+        alpha = jax.scipy.linalg.cho_solve((chol, True), y[:, None])[:, 0]
+        logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
+        return (-0.5 * jnp.dot(y, alpha) - 0.5 * logdet
+                - 0.5 * n * jnp.log(2.0 * jnp.pi))
+
+    def posterior(self, x: Array, y: Array, xs: Array, *, lengthscale,
+                  outputscale, noise) -> ExactPosterior:
+        khat = self._khat(x, lengthscale, outputscale, noise)
+        chol = jnp.linalg.cholesky(khat)
+        kxs = km.gram(self.profile, x, xs, lengthscale, outputscale)
+        alpha = jax.scipy.linalg.cho_solve((chol, True), y[:, None])[:, 0]
+        mean = kxs.T @ alpha
+        vs = jax.scipy.linalg.solve_triangular(chol, kxs, lower=True)
+        var = outputscale - jnp.sum(vs * vs, axis=0)
+        return ExactPosterior(mean=mean, var=jnp.maximum(var, 1e-8))

@@ -1,0 +1,160 @@
+"""Stationary kernel profiles (paper §4, Rasmussen & Williams 2005).
+
+A *profile* is the radial function ``k(tau)`` of a stationary kernel
+``K(x, x') = outputscale * k(||x - x'||)`` evaluated on lengthscale-normalized
+inputs.  Simplex-GP (paper §4.1) discretizes the profile onto the lattice, and
+the gradient trick (paper §4.2, Eq. 11-13) additionally needs ``k'``, the
+derivative of the kernel *with respect to the squared distance*.
+
+Profiles are expressed as plain functions of ``tau`` (distance, not squared)
+so the same object serves the stencil builder (which samples ``k(i * s)``),
+the dense oracles, and the exact-MVM Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+SQRT3 = math.sqrt(3.0)
+SQRT5 = math.sqrt(5.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelProfile:
+    """A stationary kernel's radial profile and its squared-distance derivative.
+
+    Attributes:
+      name: identifier used by configs / benchmarks.
+      k: ``tau -> k(tau)`` with ``k(0) == 1`` (unit outputscale).
+      dk_dsq: ``tau -> dk/d(tau^2)`` — the ``k'`` of paper Eq. 11. Defined as a
+        function of ``tau`` (not ``tau^2``) because both the stencil builder
+        and the dense oracle naturally have ``tau`` in hand.
+    """
+
+    name: str
+    k: Callable[[Array], Array]
+    dk_dsq: Callable[[Array], Array]
+
+    def __call__(self, tau: Array) -> Array:
+        return self.k(tau)
+
+
+def _rbf(tau: Array) -> Array:
+    return jnp.exp(-0.5 * tau * tau)
+
+
+def _rbf_dsq(tau: Array) -> Array:
+    # k(t2) = exp(-t2/2)  =>  dk/dt2 = -1/2 exp(-t2/2)
+    return -0.5 * jnp.exp(-0.5 * tau * tau)
+
+
+def _matern12(tau: Array) -> Array:
+    return jnp.exp(-jnp.abs(tau))
+
+
+def _matern12_dsq(tau: Array) -> Array:
+    # k = exp(-sqrt(t2)); dk/dt2 = -exp(-tau)/(2 tau); singular at 0 — clamp.
+    safe = jnp.maximum(jnp.abs(tau), 1e-12)
+    return -jnp.exp(-safe) / (2.0 * safe)
+
+
+def _matern32(tau: Array) -> Array:
+    a = SQRT3 * jnp.abs(tau)
+    return (1.0 + a) * jnp.exp(-a)
+
+
+def _matern32_dsq(tau: Array) -> Array:
+    # k = (1 + a) e^{-a}, a = sqrt(3) tau. dk/dt2 = dk/da * da/dt2
+    # dk/da = -a e^{-a};  da/dt2 = sqrt(3)/(2 tau)  =>  dk/dt2 = -3/2 e^{-a}
+    a = SQRT3 * jnp.abs(tau)
+    return -1.5 * jnp.exp(-a)
+
+
+def _matern52(tau: Array) -> Array:
+    a = SQRT5 * jnp.abs(tau)
+    return (1.0 + a + a * a / 3.0) * jnp.exp(-a)
+
+
+def _matern52_dsq(tau: Array) -> Array:
+    # k(a) = (1 + a + a^2/3) e^{-a}; dk/da = -(a + a^2) e^{-a} / ... compute:
+    # dk/da = (1 + 2a/3) e^{-a} - (1 + a + a^2/3) e^{-a} = -(a/3)(1 + a) e^{-a}
+    # dk/dt2 = dk/da * sqrt(5)/(2 tau) = -(5/6)(1 + a) e^{-a}
+    a = SQRT5 * jnp.abs(tau)
+    return -(5.0 / 6.0) * (1.0 + a) * jnp.exp(-a)
+
+
+RBF = KernelProfile("rbf", _rbf, _rbf_dsq)
+MATERN12 = KernelProfile("matern12", _matern12, _matern12_dsq)
+MATERN32 = KernelProfile("matern32", _matern32, _matern32_dsq)
+MATERN52 = KernelProfile("matern52", _matern52, _matern52_dsq)
+
+PROFILES: dict[str, KernelProfile] = {
+    p.name: p for p in (RBF, MATERN12, MATERN32, MATERN52)
+}
+
+
+def get_profile(name: str) -> KernelProfile:
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise ValueError(f"unknown kernel profile {name!r}; have {sorted(PROFILES)}")
+
+
+# ---------------------------------------------------------------------------
+# Dense oracles. These are the ground truth every approximation in this
+# repository (lattice filter, SKI grid, SKIP, Pallas exact_mvm) is tested
+# against. O(n^2 d) — small-n only.
+# ---------------------------------------------------------------------------
+
+
+def pairwise_sqdist(x1: Array, x2: Array) -> Array:
+    """Squared Euclidean distances, (n1, d) x (n2, d) -> (n1, n2)."""
+    n1 = jnp.sum(x1 * x1, axis=-1)[:, None]
+    n2 = jnp.sum(x2 * x2, axis=-1)[None, :]
+    sq = n1 + n2 - 2.0 * (x1 @ x2.T)
+    return jnp.maximum(sq, 0.0)
+
+
+def gram(profile: KernelProfile, x1: Array, x2: Array,
+         lengthscale: Array | float = 1.0,
+         outputscale: Array | float = 1.0) -> Array:
+    """Dense kernel matrix with ARD lengthscales (oracle)."""
+    ls = jnp.asarray(lengthscale)
+    z1 = x1 / ls
+    z2 = x2 / ls
+    tau = jnp.sqrt(pairwise_sqdist(z1, z2) + 1e-30)
+    return outputscale * profile.k(tau)
+
+
+def dense_mvm(profile: KernelProfile, x: Array, v: Array,
+              lengthscale: Array | float = 1.0,
+              outputscale: Array | float = 1.0) -> Array:
+    """Oracle MVM ``v -> K v`` (paper Eq. 1/10)."""
+    return gram(profile, x, x, lengthscale, outputscale) @ v
+
+
+def dense_grad_x(profile: KernelProfile, x: Array, v: Array, g: Array,
+                 lengthscale: Array | float = 1.0) -> Array:
+    """Oracle for the paper's Eq. 11: d/dx_n of L where dL/du = g, u = K v.
+
+    Computed directly from the analytic identity (not autodiff) so that the
+    lattice implementation of Eq. 12/13 has an exact target modulo the
+    filtering approximation.
+    """
+    ls = jnp.asarray(lengthscale)
+    z = x / ls
+    tau = jnp.sqrt(pairwise_sqdist(z, z) + 1e-30)
+    kp = profile.dk_dsq(tau)  # (n, n)
+    gv = g @ v.T  # (n, n): sum_c g_ic v_jc
+    m = kp * gv
+    sym = m + m.T
+    # dL/dz_n = 2 sum_j sym_nj (z_n - z_j)  [Eq. 11 collapsed]
+    row = jnp.sum(sym, axis=1, keepdims=True)
+    dz = 2.0 * (z * row - sym @ z)
+    return dz / ls  # chain back to x

@@ -1,0 +1,359 @@
+"""Permutohedral lattice (paper §3.2), TPU-native static-shape formulation.
+
+The reference CUDA implementation (Adams et al. 2010) builds a dynamic hash
+table at splat time and probes it at blur time. TPUs have neither dynamic
+allocation nor atomics, so this module re-derives the lattice with
+static-shape primitives (see DESIGN.md §2):
+
+  * every input emits the ``d+1`` vertex keys of its enclosing simplex;
+  * keys are deduplicated with an exact lexicographic ``lax.sort`` (no hash,
+    no collisions, deterministic) into a fixed-capacity table;
+  * blur neighbors are resolved ONCE at build time by a second merge-sort
+    lookup, producing a dense ``(d+1, cap, 2r)`` int32 gather table;
+  * splat is a ``segment_sum``, blur is ``gather + stencil reduction``,
+    slice is ``take + barycentric contraction``.
+
+All shapes depend only on ``(n, d, r, cap)`` so the whole build is jittable
+and re-runs every time the lengthscale moves, exactly like the CUDA filter
+rebuilds its hash table per call.
+
+Geometry facts used below (verified in tests/test_lattice.py):
+  * the elevation basis E (paper Eq. 7 neighborhood) has orthogonal columns
+    with norms sqrt((j+1)(j+2)); dividing by those norms makes elevation an
+    isometry, so scaling inputs by ``alpha`` scales embedded distances by
+    ``alpha``;
+  * one lattice step along any of the ``d+1`` blur directions has embedded
+    length ``sqrt(d(d+1))``; choosing ``alpha = sqrt(d(d+1)) / s`` makes a
+    lattice step correspond to distance ``s`` in the (lengthscale-normalized)
+    input space, which is how the §4.1 stencil spacing is realized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+INT_SENTINEL_A = jnp.iinfo(jnp.int32).max // 2  # padding keys for invalid table rows
+INT_SENTINEL_B = jnp.iinfo(jnp.int32).min // 2  # padding keys for invalid queries
+
+
+def step_scale(d: int, spacing: float) -> float:
+    """Input-space scaling so one lattice step == ``spacing`` (DESIGN.md §2)."""
+    return math.sqrt(d * (d + 1.0)) / spacing
+
+
+def elevation_scales(d: int, spacing: float) -> jnp.ndarray:
+    """Per-dimension scale factors folded into the triangular elevation."""
+    j = jnp.arange(d, dtype=jnp.float32)
+    return step_scale(d, spacing) / jnp.sqrt((j + 1.0) * (j + 2.0))
+
+
+def elevate(z: Array, spacing: float) -> Array:
+    """Embed (n, d) inputs into the hyperplane H_d in R^{d+1}.
+
+    Triangular-basis elevation (paper §3.2 "Splat"): O(d) per point via
+    suffix sums, equivalent to multiplying by the orthogonal-column basis E.
+    """
+    n, d = z.shape
+    c = z * elevation_scales(d, spacing)[None, :]  # (n, d)
+    # elevated[0] = sum_j c_j ; elevated[i] = sum_{j>=i} c_j - i * c_{i-1}
+    suffix = jnp.cumsum(c[:, ::-1], axis=1)[:, ::-1]  # suffix[:, i] = sum_{j>=i} c_j
+    suffix_full = jnp.concatenate([suffix, jnp.zeros((n, 1), c.dtype)], axis=1)
+    i = jnp.arange(1, d + 1, dtype=c.dtype)
+    elevated_rest = suffix_full[:, 1:] - i[None, :] * c  # rows i=1..d
+    return jnp.concatenate([suffix_full[:, :1], elevated_rest], axis=1)
+
+
+def simplex_embed(z: Array, spacing: float):
+    """Find enclosing-simplex vertices + barycentric weights for each input.
+
+    Vectorized port of the rounding algorithm of Adams et al. (2010) §3.
+    Returns:
+      keys:    (n, d+1, d+1) int32 — lattice coordinates of the d+1 vertices.
+      weights: (n, d+1) float32 — barycentric interpolation weights (sum to 1).
+    """
+    n, d = z.shape
+    el = elevate(z, spacing)  # (n, d+1)
+
+    # Round to the nearest remainder-0 point (multiples of d+1).
+    v = el / (d + 1.0)
+    rem0 = jnp.round(v) * (d + 1.0)  # (n, d+1) float
+    diff = el - rem0
+
+    # rank[i] = how many coords have a strictly larger differential
+    # (stable argsort of -diff, then invert the permutation). The integer
+    # lattice structure carries no gradient — stop_gradient keeps autodiff
+    # (the beyond-paper grad_mode="autodiff" path, which differentiates the
+    # barycentric weights) from tracing through the sort.
+    order = jnp.argsort(jax.lax.stop_gradient(-diff), axis=1, stable=True)
+    rank = jnp.zeros((n, d + 1), dtype=jnp.int32)
+    rank = jax.vmap(lambda o: jnp.zeros(d + 1, jnp.int32).at[o].set(
+        jnp.arange(d + 1, dtype=jnp.int32)))(order)
+
+    # Fix up so coordinates sum to zero on the lattice plane.
+    coordsum = jnp.round(jnp.sum(rem0, axis=1) / (d + 1.0)).astype(jnp.int32)
+    rank = rank + coordsum[:, None]
+    under = rank < 0
+    over = rank > d
+    rank = jnp.where(under, rank + (d + 1), jnp.where(over, rank - (d + 1), rank))
+    rem0 = jnp.where(under, rem0 + (d + 1.0), jnp.where(over, rem0 - (d + 1.0), rem0))
+
+    # Barycentric weights from the (fixed-up) differential, sorted by rank.
+    delta = (el - rem0) / (d + 1.0)  # (n, d+1)
+    bary = jnp.zeros((n, d + 2), dtype=z.dtype)
+    rows = jnp.arange(n)[:, None]
+    bary = bary.at[rows, d - rank].add(delta)
+    bary = bary.at[rows, d + 1 - rank].add(-delta)
+    bary = bary.at[:, 0].add(1.0 + bary[:, d + 1])
+    weights = bary[:, : d + 1]  # (n, d+1); w_k for canonical vertex k
+
+    # Vertex keys: rem0 + canonical_k[rank] with
+    # canonical_k[r] = k - (d+1) * (r + k > d).
+    rem0_i = jnp.round(rem0).astype(jnp.int32)  # exact multiples of d+1
+    k = jnp.arange(d + 1, dtype=jnp.int32)[None, :, None]  # (1, d+1, 1) vertex idx
+    rk = rank[:, None, :]  # (1 -> n, 1, d+1) coordinate ranks
+    canon = k - (d + 1) * ((rk + k) > d).astype(jnp.int32)  # (n, d+1, d+1)
+    keys = rem0_i[:, None, :] + canon
+    return keys, weights.astype(jnp.float32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Lattice:
+    """Static-shape lattice structure; a pytree safe to pass through jit.
+
+    Rows ``0..cap-1`` of every per-lattice-point array are (potentially)
+    valid slots; row ``cap`` is the dump/sentinel row, kept at zero so that
+    out-of-range gathers contribute nothing.
+    """
+
+    coords: Array  # (cap+1, d+1) int32: lattice point coordinates
+    valid: Array  # (cap+1,) bool
+    m: Array  # () int32: number of unique lattice points (may exceed cap!)
+    seg_ids: Array  # (n*(d+1),) int32 in [0, cap]: slot per (input, vertex)
+    weights: Array  # (n, d+1) f32 barycentric
+    nbr: Array  # (d+1, cap+1, 2r) int32 in [0, cap]: blur gather table
+    overflow: Array  # () bool: m > cap (results invalid; grow cap and retry)
+    d: int = dataclasses.field(metadata=dict(static=True))
+    r: int = dataclasses.field(metadata=dict(static=True))
+    cap: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+
+def _lex_sort(cols: Sequence[Array], payloads: Sequence[Array]):
+    out = jax.lax.sort(tuple(cols) + tuple(payloads), num_keys=len(cols))
+    return out[: len(cols)], out[len(cols):]
+
+
+# --- packed sort keys (§Perf iteration C1) ---------------------------------
+# Lattice coordinates sum to zero, so the last one is redundant; the first
+# d are packed two-per-int32 (16-bit biased fields, order-preserving).
+# This halves (+1/(d+1)) the lex-sort key traffic of both the dedup sort
+# and the neighbor-table merge sort — the dominant cost of the lattice
+# build at houseelectric scale. Coordinates beyond +/-2^15 would corrupt
+# the packing; they instead raise the existing ``overflow`` flag (the same
+# grow-and-retry contract as capacity overflow).
+
+_PACK_BIAS = 1 << 15
+_PACK_LIMIT = (1 << 15) - 2
+
+
+def _pack_key_cols(keys: Array) -> list[Array]:
+    """(N, d+1) int32 coords -> ceil(d/2) int32 sort columns."""
+    n, c = keys.shape
+    use = keys[:, : c - 1]  # last coord = -(sum of others)
+    cols = []
+    for start in range(0, c - 1, 2):
+        hi = use[:, start].astype(jnp.int32) + _PACK_BIAS
+        if start + 1 < c - 1:
+            lo = use[:, start + 1].astype(jnp.int32) + _PACK_BIAS
+        else:
+            lo = jnp.zeros_like(hi)
+        cols.append((hi << 16) | lo)
+    return cols
+
+
+def _pack_overflow(keys: Array) -> Array:
+    return jnp.any(jnp.abs(keys) > _PACK_LIMIT)
+
+
+def default_capacity(n: int, d: int) -> int:
+    """Worst case m = n (d+1) (paper Table 3's L)."""
+    return n * (d + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "cap"))
+def build_lattice(z: Array, *, spacing: float, r: int = 1,
+                  cap: int | None = None) -> Lattice:
+    """Construct the lattice for (already lengthscale-normalized) inputs.
+
+    Args:
+      z: (n, d) float32 — inputs in the normalized metric of the kernel.
+      spacing: §4.1 stencil spacing s (input-space distance of a lattice step).
+      r: stencil radius (paper's blur order; Appendix A uses r=1).
+      cap: static table capacity; defaults to the worst case n*(d+1).
+    """
+    n, d = z.shape
+    if cap is None:
+        cap = default_capacity(n, d)
+
+    keys, weights = simplex_embed(z, spacing)  # (n, d+1, d+1), (n, d+1)
+    flat = keys.reshape(n * (d + 1), d + 1)
+    big = n * (d + 1)
+
+    # ---- exact dedup via lexicographic sort over PACKED keys ---------------
+    cols = _pack_key_cols(flat)
+    payload = jnp.arange(big, dtype=jnp.int32)
+    coord_payload = [flat[:, j] for j in range(d + 1)]
+    sorted_cols, sorted_payloads = _lex_sort(cols,
+                                             [payload] + coord_payload)
+    perm = sorted_payloads[0]
+    skeys = jnp.stack(sorted_payloads[1:], axis=1)  # (big, d+1) sorted
+    spacked = jnp.stack(sorted_cols, axis=1)
+    new_group = jnp.concatenate([
+        jnp.ones((1,), bool),
+        jnp.any(spacked[1:] != spacked[:-1], axis=1),
+    ])
+    uid_sorted = jnp.cumsum(new_group.astype(jnp.int32)) - 1  # (big,)
+    m = uid_sorted[-1] + 1
+    overflow = (m > cap) | _pack_overflow(flat)
+    slot_sorted = jnp.minimum(uid_sorted, cap)  # overflowed uniques -> dump row
+
+    # lattice point coords (every member of a group writes the same value)
+    coords = jnp.zeros((cap + 1, d + 1), jnp.int32).at[slot_sorted].set(skeys)
+    valid = jnp.zeros((cap + 1,), bool).at[slot_sorted].set(True)
+    valid = valid.at[cap].set(False)
+
+    # per-(input, vertex) slot ids, back in original order
+    seg_ids = jnp.zeros((big,), jnp.int32).at[perm].set(slot_sorted)
+
+    # ---- blur neighbor table via merge-sort lookup -------------------------
+    nbr = _neighbor_table(coords, valid, d=d, r=r, cap=cap)
+
+    return Lattice(coords=coords, valid=valid, m=m, seg_ids=seg_ids,
+                   weights=weights, nbr=nbr, overflow=overflow,
+                   d=d, r=r, cap=cap, n=n)
+
+
+def _neighbor_table(coords: Array, valid: Array, *, d: int, r: int,
+                    cap: int) -> Array:
+    """Resolve, for each lattice point and direction, the slots of its
+    ``±1..±r`` neighbors. Returns (d+1, cap+1, 2r) int32 with misses -> cap.
+
+    Strategy: concat [table entries (tag 0), neighbor queries (tag 1)],
+    lex-sort by (coords..., tag); every query's match, if present, is the
+    closest preceding tag-0 entry with identical coordinates.
+    """
+    # offsets along direction a: -1 everywhere, +d at coordinate a
+    eye = jnp.eye(d + 1, dtype=jnp.int32)
+    dirs = (d + 1) * eye - 1  # (d+1, d+1): dirs[a] = offset of +1 step along a
+
+    steps = jnp.concatenate([jnp.arange(-r, 0), jnp.arange(1, r + 1)])  # (2r,)
+    # queries[a, p, s] = coords[p] + steps[s] * dirs[a]
+    table = coords[: cap + 1]  # includes dump row; masked below
+    q = (table[None, :, None, :]
+         + steps[None, None, :, None] * dirs[:, None, None, :])  # (d+1, cap+1, 2r, d+1)
+    nq = (d + 1) * (cap + 1) * (2 * r)
+    q = q.reshape(nq, d + 1)
+
+    # pack keys (C1); invalid sources/entries get out-of-band packed cols
+    q_packed = jnp.stack(_pack_key_cols(q), axis=1)
+    t_packed = jnp.stack(_pack_key_cols(table), axis=1)
+    src_valid = jnp.repeat(valid[: cap + 1], 2 * r)  # reshape order per a
+    src_valid = jnp.tile(src_valid, d + 1)
+    q_packed = jnp.where(src_valid[:, None], q_packed, INT_SENTINEL_B)
+    t_packed = jnp.where(valid[:, None], t_packed, INT_SENTINEL_A)
+
+    all_keys = jnp.concatenate([t_packed, q_packed], axis=0)
+    npk = all_keys.shape[1]
+    tag = jnp.concatenate([
+        jnp.zeros((cap + 1,), jnp.int32),
+        jnp.ones((nq,), jnp.int32),
+    ])
+    payload = jnp.concatenate([
+        jnp.arange(cap + 1, dtype=jnp.int32),  # table slot
+        jnp.arange(nq, dtype=jnp.int32),  # query id
+    ])
+    key_cols = [all_keys[:, j] for j in range(npk)] + [tag]
+    sorted_cols, (spayload,) = _lex_sort(key_cols, [payload])
+    scoords = jnp.stack(sorted_cols[: npk], axis=1)  # (N, npk) packed
+    stag = sorted_cols[npk]
+
+    nfull = scoords.shape[0]
+    pos = jnp.arange(nfull, dtype=jnp.int32)
+    # forward-fill the position of the most recent table entry; a query
+    # matches iff that entry has identical coordinates (tag 0 sorts first
+    # within a coordinate group, and table entries are unique).
+    last_a_pos = jax.lax.cummax(jnp.where(stag == 0, pos, -1))
+    cand = jnp.maximum(last_a_pos, 0)
+    same = jnp.all(scoords[cand] == scoords, axis=1) & (last_a_pos >= 0)
+    matched_slot = jnp.where(same & (stag == 1), spayload[cand], cap)
+
+    # scatter back: query id -> matched slot (non-queries dropped via OOB)
+    is_q = stag == 1
+    out = jnp.full((nq,), cap, jnp.int32).at[
+        jnp.where(is_q, spayload, nq)
+    ].set(matched_slot, mode="drop")
+    return out.reshape(d + 1, cap + 1, 2 * r)
+
+
+# ---------------------------------------------------------------------------
+# Splat / Blur / Slice (paper §3.2) — the three SKI factors W^T, K_UU, W.
+# ---------------------------------------------------------------------------
+
+
+def splat(lat: Lattice, v: Array) -> Array:
+    """W^T v: scatter barycentric-weighted values onto lattice points.
+
+    v: (n, c) -> (cap+1, c); dump row forced to zero.
+    """
+    n, c = v.shape
+    contrib = (lat.weights[:, :, None] * v[:, None, :]).reshape(
+        n * (lat.d + 1), c)
+    out = jax.ops.segment_sum(contrib, lat.seg_ids, num_segments=lat.cap + 1)
+    return out.at[lat.cap].set(0.0)
+
+
+def blur_one_direction(lat: Lattice, vals: Array, stencil: Array,
+                       direction: Array) -> Array:
+    """Convolve lattice values with the stencil along one lattice direction."""
+    nb = lat.nbr[direction]  # (cap+1, 2r)
+    r = lat.r
+    out = vals * stencil[r]
+    gathered = vals[nb]  # (cap+1, 2r, c) ; dump row is zero
+    w = jnp.concatenate([stencil[:r], stencil[r + 1:]])  # (2r,)
+    out = out + jnp.einsum("prc,r->pc", gathered, w)
+    return out.at[lat.cap].set(0.0)
+
+
+def blur(lat: Lattice, vals: Array, stencil: Array, *,
+         reverse: bool = False) -> Array:
+    """Sequential separable blur along the d+1 lattice directions.
+
+    ``reverse=True`` runs directions in the opposite order, which is exactly
+    the transpose of the forward blur (each directional blur is symmetric) —
+    used for the adjoint in lattice_filter's custom VJP and for the
+    symmetrized operator 0.5 (F + F^T).
+    """
+    order = jnp.arange(lat.d + 1)
+    if reverse:
+        order = order[::-1]
+
+    def body(carry, a):
+        return blur_one_direction(lat, carry, stencil, a), None
+
+    out, _ = jax.lax.scan(body, vals, order)
+    return out
+
+
+def slice_(lat: Lattice, vals: Array) -> Array:
+    """W u: barycentric resampling back at the input locations. -> (n, c)"""
+    per_vertex = vals[lat.seg_ids]  # (n*(d+1), c)
+    per_vertex = per_vertex.reshape(lat.n, lat.d + 1, -1)
+    return jnp.einsum("nkc,nk->nc", per_vertex, lat.weights)

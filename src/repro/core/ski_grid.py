@@ -1,0 +1,157 @@
+"""KISS-GP: dense rectilinear-grid SKI baseline (Wilson & Nickisch 2015).
+
+This is the method the paper generalizes (§2.1). Inducing points lie on a
+cubic grid; interpolation is 4-point cubic convolution (Keys) per dimension,
+so each input touches 4^d grid points — the 2^d-neighbor exponential blowup
+(Fig. 1) that Simplex-GP removes. K_UU has Kronecker structure over the
+grid axes (valid for kernels that factor across dimensions, e.g. RBF; for
+Matern we use the per-dimension *product* form, as standard for
+Kronecker-SKI).
+
+Usable only for small d (the paper's point); tests compare it against the
+dense oracle and against Simplex-GP on d <= 4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_math import KernelProfile
+
+Array = jax.Array
+
+
+def cubic_weights(u: Array) -> Array:
+    """Keys cubic-convolution weights (a = -1/2) for offsets [-1,0,1,2].
+
+    u: (...,) fractional position in [0, 1). Returns (..., 4); rows sum to 1.
+    """
+    u2 = u * u
+    u3 = u2 * u
+    w0 = 0.5 * (-u3 + 2.0 * u2 - u)
+    w1 = 0.5 * (3.0 * u3 - 5.0 * u2 + 2.0)
+    w2 = 0.5 * (-3.0 * u3 + 4.0 * u2 + u)
+    w3 = 0.5 * (u3 - u2)
+    return jnp.stack([w0, w1, w2, w3], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    lo: Array  # (d,)
+    h: Array  # (d,) spacing
+    sizes: tuple[int, ...]  # static per-dim grid sizes
+
+    @property
+    def total(self) -> int:
+        out = 1
+        for g in self.sizes:
+            out *= g
+        return out
+
+
+def make_grid(x: Array, sizes: Sequence[int], margin: float = 0.1) -> Grid:
+    lo = jnp.min(x, axis=0)
+    hi = jnp.max(x, axis=0)
+    span = jnp.maximum(hi - lo, 1e-6)
+    lo = lo - margin * span
+    hi = hi + margin * span
+    sizes = tuple(int(g) for g in sizes)
+    h = (hi - lo) / (jnp.asarray([g - 1 for g in sizes], x.dtype))
+    return Grid(lo=lo, h=h, sizes=sizes)
+
+
+def interp_indices_weights(grid: Grid, x: Array) -> tuple[Array, Array]:
+    """Cubic interpolation onto the grid.
+
+    Returns:
+      idx: (n, 4**d) int32 raveled grid indices.
+      w:   (n, 4**d) float weights (rows sum to 1).
+    """
+    n, d = x.shape
+    t = (x - grid.lo[None]) / grid.h[None]  # grid coords
+    sizes = jnp.asarray(grid.sizes)
+    # keep the 4-point stencil in range: base in [1, g-3]
+    base = jnp.clip(jnp.floor(t).astype(jnp.int32), 1, sizes[None] - 3)
+    u = t - base.astype(x.dtype)
+    w4 = cubic_weights(u)  # (n, d, 4)
+    offs = jnp.arange(-1, 3, dtype=jnp.int32)  # (4,)
+    idx4 = base[:, :, None] + offs[None, None, :]  # (n, d, 4)
+
+    combos = list(itertools.product(range(4), repeat=d))  # 4^d static
+    combo_arr = jnp.asarray(combos, jnp.int32)  # (4^d, d)
+    # gather per-dim picks: (n, 4^d, d)
+    picked_idx = jnp.take_along_axis(
+        idx4[:, None, :, :].repeat(len(combos), axis=1),
+        combo_arr[None, :, :, None], axis=3)[..., 0]
+    picked_w = jnp.take_along_axis(
+        w4[:, None, :, :].repeat(len(combos), axis=1),
+        combo_arr[None, :, :, None], axis=3)[..., 0]
+    w = jnp.prod(picked_w, axis=2)  # (n, 4^d)
+    # ravel multi-index
+    strides = []
+    s = 1
+    for g in reversed(grid.sizes):
+        strides.append(s)
+        s *= g
+    strides = jnp.asarray(list(reversed(strides)), jnp.int32)  # (d,)
+    idx = jnp.sum(picked_idx * strides[None, None, :], axis=2)
+    return idx, w.astype(x.dtype)
+
+
+def kron_factors(profile: KernelProfile, grid: Grid,
+                 dtype=jnp.float32) -> list[Array]:
+    """Per-dimension dense (g, g) kernel matrices (inputs pre-normalized)."""
+    mats = []
+    for a, g in enumerate(grid.sizes):
+        pts = grid.lo[a] + grid.h[a] * jnp.arange(g, dtype=dtype)
+        tau = jnp.abs(pts[:, None] - pts[None, :])
+        mats.append(profile.k(tau).astype(dtype))
+    return mats
+
+
+def kron_matvec(factors: list[Array], v: Array) -> Array:
+    """(K_1 kron ... kron K_d) v for v of length prod(g_i), batched cols.
+
+    v: (m, c). Sequentially contracts each axis: O(sum_i g_i * m) per col.
+    """
+    sizes = [f.shape[0] for f in factors]
+    c = v.shape[1]
+    t = v.reshape(*sizes, c)
+    for a, f in enumerate(factors):
+        t = jnp.moveaxis(jnp.tensordot(f, t, axes=([1], [a])), 0, a)
+    return t.reshape(-1, c)
+
+
+@dataclasses.dataclass(frozen=True)
+class KissGPOperator:
+    """W K_UU W^T as an MVM closure — KISS-GP's SKI decomposition."""
+
+    idx: Array  # (n, 4^d)
+    w: Array  # (n, 4^d)
+    factors: tuple[Array, ...]
+    total: int
+
+    def mvm(self, v: Array) -> Array:
+        n, q = self.idx.shape
+        c = v.shape[1]
+        contrib = (self.w[:, :, None] * v[:, None, :]).reshape(n * q, c)
+        splat = jax.ops.segment_sum(contrib, self.idx.reshape(-1),
+                                    num_segments=self.total)
+        blurred = kron_matvec(list(self.factors), splat)
+        gathered = blurred[self.idx.reshape(-1)].reshape(n, q, c)
+        return jnp.einsum("nqc,nq->nc", gathered, self.w)
+
+
+def kiss_gp_operator(profile: KernelProfile, x: Array,
+                     grid_size: int | Sequence[int]) -> KissGPOperator:
+    """Build the KISS-GP operator for lengthscale-normalized inputs x."""
+    n, d = x.shape
+    sizes = [grid_size] * d if isinstance(grid_size, int) else list(grid_size)
+    grid = make_grid(x, sizes)
+    idx, w = interp_indices_weights(grid, x)
+    factors = tuple(kron_factors(profile, grid, x.dtype))
+    return KissGPOperator(idx=idx, w=w, factors=factors, total=grid.total)

@@ -1,0 +1,3 @@
+from repro.data import pipeline, synthetic_uci, tokens
+
+__all__ = ["pipeline", "synthetic_uci", "tokens"]

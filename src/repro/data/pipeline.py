@@ -1,0 +1,76 @@
+"""Host data pipeline: background prefetch + deterministic resume.
+
+A thin, dependency-free analogue of the tf.data/grain input pipelines the
+big frameworks use:
+
+  * ``Prefetcher`` — a daemon thread keeps ``depth`` batches ahead of the
+    training loop so host data generation overlaps device compute.
+  * step-indexed determinism — the underlying sources (data/tokens.py,
+    data/synthetic_uci.py) are pure functions of the step, so resuming
+    from a checkpoint is just "start at step k"; no iterator state files.
+  * ``skip_steps`` — the straggler-mitigation hook (runtime/straggler.py)
+    can ask the pipeline to skip a step on all hosts deterministically.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+Batch = dict
+
+
+class Prefetcher:
+    def __init__(self, make_batch: Callable[[int], Batch], start_step: int,
+                 depth: int = 2):
+        self._make = make_batch
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._next = start_step
+        self._skips: set[int] = set()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while not self._stop.is_set():
+            with self._lock:
+                step = self._next
+                if step in self._skips:
+                    self._skips.discard(step)
+                    self._next += 1
+                    continue
+                self._next += 1
+            try:
+                batch = self._make(step)
+            except Exception as e:  # surface in consumer thread
+                self._q.put((step, e))
+                return
+            self._q.put((step, batch))
+
+    def skip(self, step: int):
+        """Deterministically drop `step` (straggler recovery)."""
+        with self._lock:
+            self._skips.add(step)
+
+    def __iter__(self) -> Iterator[tuple[int, Batch]]:
+        return self
+
+    def __next__(self) -> tuple[int, Batch]:
+        while True:
+            step, item = self._q.get()
+            if isinstance(item, Exception):
+                raise item
+            with self._lock:
+                if step in self._skips:  # was already prefetched when skipped
+                    self._skips.discard(step)
+                    continue
+            return step, item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,64 @@
+"""Deterministic synthetic token stream for the LM architectures.
+
+Stateless-indexable: token value is a pure function of (stream seed,
+sequence id, position), so any host can materialize exactly its own data
+shard for any step without coordination — the property that makes
+deterministic restart/elastic-resharding trivial (runtime/elastic.py).
+
+A light Zipf-ish skew is layered on top of a counter-mode hash so the
+batches are not uniform noise (MoE routing then exercises imbalanced
+paths, like real text would).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_MUL = np.uint64(6364136223846793005)
+_INC = np.uint64(1442695040888963407)
+
+
+def _hash64(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint64)
+    x = (x * _MUL + _INC)
+    x ^= x >> np.uint64(33)
+    x = x * np.uint64(0xFF51AFD7ED558CCD)
+    x ^= x >> np.uint64(33)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_alpha: float = 1.1
+
+    def seq_ids(self, step: int) -> np.ndarray:
+        """Global sequence ids consumed at `step` (deterministic order)."""
+        start = step * self.global_batch
+        return np.arange(start, start + self.global_batch, dtype=np.int64)
+
+    def batch(self, step: int, *, shard: int = 0,
+              num_shards: int = 1) -> dict[str, np.ndarray]:
+        """Materialize this host's shard of the step's global batch.
+
+        Returns tokens (b_local, seq) and next-token labels (b_local, seq).
+        """
+        ids = self.seq_ids(step)
+        local = ids[shard::num_shards] if num_shards > 1 else ids
+        b = local.shape[0]
+        pos = np.arange(self.seq_len + 1, dtype=np.int64)
+        key = (local[:, None] << np.int64(20)) + pos[None, :] \
+            + np.int64(self.seed) * np.int64(1_000_003)
+        u = (_hash64(key) >> np.uint64(11)).astype(np.float64) / float(2 ** 53)
+        # inverse-CDF of a truncated zipf: rank ~ u^(-1/(alpha-1)) style skew
+        ranks = np.floor(
+            (self.vocab_size ** (1.0 - u)) - 1.0).astype(np.int64)
+        toks = np.clip(ranks, 0, self.vocab_size - 1)
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }

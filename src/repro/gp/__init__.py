@@ -1,0 +1,9 @@
+"""MVM-based GP inference built on the Simplex-GP operator."""
+from repro.gp.models import GPParams, SimplexGP, SimplexGPConfig
+from repro.gp.mll import MLLResult, mll_value_and_grad
+from repro.gp.predict import Posterior, cross_mvm, nll, posterior, rmse
+from repro.gp.train import TrainResult, fit
+
+__all__ = ["GPParams", "SimplexGP", "SimplexGPConfig", "MLLResult",
+           "mll_value_and_grad", "Posterior", "cross_mvm", "nll",
+           "posterior", "rmse", "TrainResult", "fit"]

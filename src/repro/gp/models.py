@@ -1,0 +1,159 @@
+"""GP model definitions: hyperparameters + the Simplex-GP operator factory.
+
+``GPParams`` holds raw (unconstrained) hyperparameters; softplus transforms
+keep lengthscale/outputscale/noise positive, with the paper's minimum-noise
+floor (Appendix A: {1e-4, 1e-1}). ``SimplexGP.operator`` builds the lattice
+ONCE per hyperparameter setting and returns the K_hat MVM closure used by
+all CG/Lanczos iterations of that step — the paper's amortization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import filtering, kernels_math as km
+from repro.core.lattice import Lattice, build_lattice, default_capacity
+from repro.core.stencil import Stencil, make_stencil
+
+Array = jax.Array
+
+
+def softplus(x: Array) -> Array:
+    return jax.nn.softplus(x)
+
+
+def inv_softplus(y) -> Array:
+    y = jnp.asarray(y, jnp.float32)
+    return y + jnp.log(-jnp.expm1(-y))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GPParams:
+    raw_lengthscale: Array  # (d,) ARD
+    raw_outputscale: Array  # ()
+    raw_noise: Array  # ()
+
+    @staticmethod
+    def init(d: int, *, lengthscale: float = 1.0, outputscale: float = 1.0,
+             noise: float = 0.1) -> "GPParams":
+        return GPParams(
+            raw_lengthscale=jnp.full((d,), inv_softplus(lengthscale)),
+            raw_outputscale=inv_softplus(outputscale),
+            raw_noise=inv_softplus(noise),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SimplexGPConfig:
+    """Static configuration (Appendix A defaults)."""
+
+    kernel: str = "matern32"  # {rbf, matern12, matern32, matern52}
+    order: int = 1  # blur stencil order r
+    min_noise: float = 1e-4
+    symmetrize: bool = True
+    cap_factor: float = 1.0  # capacity = cap_factor * n * (d+1)
+    cg_tol_train: float = 1.0
+    cg_tol_eval: float = 1e-2
+    max_cg_iters: int = 100
+    precond_rank: int = 0  # 0 = no preconditioner (lattice MVMs are cheap)
+    num_probes: int = 8
+    max_lanczos_iters: int = 50
+    # "paper": §4.2 derivative-stencil custom VJP (faithful reproduction).
+    # "autodiff": differentiate through the barycentric weights of the
+    #   actual lattice operator (beyond-paper; self-consistent with the
+    #   approximate model the solves come from — see DESIGN.md §7).
+    grad_mode: str = "paper"
+
+
+class Operator(NamedTuple):
+    """K_hat = outputscale * F(z) + noise * I as closures over one lattice."""
+
+    mvm: Callable[[Array], Array]  # (n, k) -> (n, k), full K_hat
+    kxx_mvm: Callable[[Array], Array]  # kernel part only (no noise)
+    lattice: Lattice
+    noise: Array
+    outputscale: Array
+    lengthscale: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SimplexGP:
+    config: SimplexGPConfig
+
+    @property
+    def stencil(self) -> Stencil:
+        return make_stencil(self.config.kernel, self.config.order)
+
+    @property
+    def profile(self) -> km.KernelProfile:
+        return km.get_profile(self.config.kernel)
+
+    def constrained(self, params: GPParams):
+        ls = softplus(params.raw_lengthscale)
+        os_ = softplus(params.raw_outputscale)
+        noise = softplus(params.raw_noise) + self.config.min_noise
+        return ls, os_, noise
+
+    def capacity(self, n: int, d: int) -> int:
+        return int(self.config.cap_factor * default_capacity(n, d))
+
+    def operator(self, params: GPParams, x: Array) -> Operator:
+        """Build lattice once; return the K_hat MVM for CG loops.
+
+        NOT differentiable (stop-gradient semantics by construction —
+        params enter only through concrete values). Use ``surrogate_quad``
+        for gradient paths.
+        """
+        cfg = self.config
+        st = self.stencil
+        ls, os_, noise = self.constrained(params)
+        z = x / ls[None, :]
+        lat = build_lattice(z, spacing=st.spacing, r=st.r,
+                            cap=self.capacity(*x.shape))
+        w = jnp.asarray(st.weights, x.dtype)
+
+        def kxx(v: Array) -> Array:
+            return os_ * filtering.filter_mvm(lat, v, w,
+                                              symmetrize=cfg.symmetrize)
+
+        def mvm(v: Array) -> Array:
+            return kxx(v) + noise * v
+
+        return Operator(mvm=mvm, kxx_mvm=kxx, lattice=lat, noise=noise,
+                        outputscale=os_, lengthscale=ls)
+
+    def quad_form(self, params: GPParams, x: Array, a: Array,
+                  b: Array) -> Array:
+        """Differentiable ``sum(a * (K_hat(theta) b))`` (for MLL surrogates).
+
+        Uses ``lattice_filter``'s §4.2 custom VJP, so gradients w.r.t.
+        lengthscale flow through z = x / ls without differentiating the
+        integer lattice construction.
+        """
+        cfg = self.config
+        st = self.stencil
+        ls, os_, noise = self.constrained(params)
+        z = x / ls[None, :]
+        w = jnp.asarray(st.weights, x.dtype)
+        if cfg.grad_mode == "paper":
+            dw = jnp.asarray(st.dweights, x.dtype)
+            spec = filtering.spec_for(st, cap=self.capacity(*x.shape),
+                                      symmetrize=cfg.symmetrize)
+            kb = os_ * filtering.lattice_filter(z, b, w, dw, spec)
+        else:  # autodiff through the barycentric interpolation (a.e. exact)
+            lat = build_lattice(z, spacing=st.spacing, r=st.r,
+                                cap=self.capacity(*x.shape))
+            kb = os_ * filtering.filter_mvm(lat, b, w,
+                                            symmetrize=cfg.symmetrize)
+        return jnp.sum(a * kb) + noise * jnp.sum(a * b)
+
+    def exact_row(self, params: GPParams, x: Array, i: Array) -> Array:
+        """Exact kernel row K_hat[i, :] (for the pivoted-Cholesky precond)."""
+        ls, os_, noise = self.constrained(params)
+        row = km.gram(self.profile, x[i][None, :], x, ls, os_)[0]
+        return row.at[i].add(noise)

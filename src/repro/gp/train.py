@@ -1,0 +1,78 @@
+"""Full-batch GP hyperparameter training (paper §5.3, Appendix A).
+
+Adam(lr=0.1) on the BBMM MLL; CG tolerance 1.0 during training and 1e-2 at
+eval; early stopping on *validation RMSE* (§5.4: the MLL is non-monotone at
+high CG tolerance, so the best model is selected by held-out RMSE). Optional
+RR-CG solves reproduce Table 4's stability/runtime trade-off.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.gp import mll as mll_mod
+from repro.gp import predict as predict_mod
+from repro.gp.models import GPParams, SimplexGP
+from repro.optim import Adam
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: GPParams
+    best_params: GPParams
+    history: list[dict]
+    best_val_rmse: float
+
+
+def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
+        epochs: int = 100, lr: float = 0.1, seed: int = 0,
+        use_rrcg: bool = False, patience: int = 15,
+        log_fn: Callable[[str], None] | None = None) -> TrainResult:
+    d = x.shape[1]
+    params = GPParams.init(d)
+    opt = Adam(learning_rate=lr)
+    opt_state = opt.init(params)
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def step(params, opt_state, key):
+        res = mll_mod.mll_value_and_grad(model, params, x, y, key,
+                                         use_rrcg=use_rrcg)
+        new_params, new_state = opt.update(res.grads, opt_state, params)
+        return new_params, new_state, res.mll, res.cg_iters
+
+    @jax.jit
+    def val_rmse(params, key):
+        post = predict_mod.posterior(model, params, x, y, x_val, key=key,
+                                     variance_rank=10)
+        return predict_mod.rmse(post, y_val)
+
+    best = (jnp.inf, params)
+    history = []
+    stall = 0
+    for epoch in range(epochs):
+        key, k1, k2 = jax.random.split(key, 3)
+        t0 = time.perf_counter()
+        params, opt_state, mll, iters = step(params, opt_state, k1)
+        dt = time.perf_counter() - t0
+        rmse = float(val_rmse(params, k2))
+        history.append(dict(epoch=epoch, mll=float(mll), val_rmse=rmse,
+                            cg_iters=int(iters), seconds=dt))
+        if log_fn:
+            log_fn(f"epoch {epoch:3d}  mll/n {float(mll)/x.shape[0]:+.4f}  "
+                   f"val_rmse {rmse:.4f}  cg_iters {int(iters)}  {dt:.2f}s")
+        if rmse < float(best[0]) - 1e-5:
+            best = (rmse, params)
+            stall = 0
+        else:
+            stall += 1
+            if stall >= patience:
+                break
+    return TrainResult(params=params, best_params=best[1], history=history,
+                       best_val_rmse=float(best[0]))

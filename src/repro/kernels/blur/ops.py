@@ -1,0 +1,41 @@
+"""Public blur op: full (d+1)-direction sweep with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lattice import Lattice
+from repro.kernels.blur.kernel import DEFAULT_BLOCK_P, blur_direction_pallas
+
+Array = jax.Array
+
+# VMEM budget for keeping the value table resident (see kernel.py docstring)
+_VMEM_TABLE_BYTES = 8 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fits_vmem(cap1: int, c: int, itemsize: int = 4) -> bool:
+    return cap1 * c * itemsize <= _VMEM_TABLE_BYTES
+
+
+def blur_pallas(lat: Lattice, vals: Array, stencil: tuple[float, ...], *,
+                reverse: bool = False,
+                block_p: int = DEFAULT_BLOCK_P) -> Array:
+    """Sequential separable blur via the Pallas kernel (one call/direction).
+
+    Drop-in replacement for repro.core.lattice.blur when the value table
+    fits VMEM; callers (core/filtering.py) choose via ``use_pallas_blur``.
+    """
+    order = range(lat.d + 1)
+    if reverse:
+        order = reversed(list(order))
+    interpret = not _on_tpu()
+    for a in order:
+        vals = blur_direction_pallas(vals, lat.nbr[a], stencil,
+                                     block_p=block_p, interpret=interpret)
+    return vals

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the lattice blur (one direction and full sweep)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def blur_direction_ref(vals: Array, nbr_dir: Array, stencil: Array,
+                       dump_row: int) -> Array:
+    """One direction of the separable lattice blur.
+
+    vals: (cap+1, c) lattice values, dump row zeroed.
+    nbr_dir: (cap+1, 2r) neighbor slots (misses -> dump row).
+    stencil: (2r+1,) taps; center at index r.
+    """
+    r = stencil.shape[0] // 2
+    out = vals * stencil[r]
+    gathered = vals[nbr_dir]  # (cap+1, 2r, c)
+    w = jnp.concatenate([stencil[:r], stencil[r + 1:]])
+    out = out + jnp.einsum("prc,r->pc", gathered, w)
+    return out.at[dump_row].set(0.0)
+
+
+def blur_ref(vals: Array, nbr: Array, stencil: Array, *,
+             reverse: bool = False) -> Array:
+    """Full (d+1)-direction sequential blur. nbr: (d+1, cap+1, 2r)."""
+    dump = vals.shape[0] - 1
+    dirs = range(nbr.shape[0])
+    if reverse:
+        dirs = reversed(list(dirs))
+    for a in dirs:
+        vals = blur_direction_ref(vals, nbr[a], stencil, dump)
+    return vals

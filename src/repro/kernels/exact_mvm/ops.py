@@ -1,0 +1,44 @@
+"""Jit'd public wrapper for the exact-MVM kernel: padding + backend choice."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_math import KernelProfile, get_profile
+from repro.kernels.exact_mvm.kernel import (DEFAULT_BLOCK_M, DEFAULT_BLOCK_N,
+                                            exact_mvm_pallas)
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("profile_name", "block_n",
+                                             "block_m"))
+def exact_mvm(profile_name: str, x: Array, v: Array, *,
+              outputscale: Array | float = 1.0,
+              block_n: int = DEFAULT_BLOCK_N,
+              block_m: int = DEFAULT_BLOCK_M) -> Array:
+    """u = outputscale * K(X,X) v via the tiled Pallas kernel.
+
+    Pads n to the block size (padded rows sit at +inf distance -> k = 0 for
+    all decaying profiles, so they contribute nothing).
+    """
+    profile = get_profile(profile_name)
+    n, d = x.shape
+    block_n = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    block_m = min(block_m, block_n)
+    pad = (-n) % max(block_n, block_m)
+    if pad:
+        # padded points are pushed far away; exp-decaying kernels vanish
+        far = jnp.full((pad, d), 1e6, x.dtype)
+        x = jnp.concatenate([x, far], axis=0)
+        v = jnp.concatenate([v, jnp.zeros((pad, v.shape[1]), v.dtype)],
+                            axis=0)
+    out = exact_mvm_pallas(profile, x, v, block_n=block_n, block_m=block_m,
+                           interpret=not _on_tpu())
+    return outputscale * out[:n]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the exact stationary-kernel MVM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_math import KernelProfile, pairwise_sqdist
+
+Array = jax.Array
+
+
+def exact_mvm_ref(profile: KernelProfile, x: Array, v: Array,
+                  *, outputscale: float | Array = 1.0) -> Array:
+    """u = outputscale * K(X, X) v, dense. x: (n, d), v: (n, c)."""
+    tau = jnp.sqrt(pairwise_sqdist(x, x) + 1e-30)
+    return outputscale * (profile.k(tau) @ v)

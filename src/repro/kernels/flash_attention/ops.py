@@ -1,0 +1,152 @@
+"""Public flash-attention op: padding, backend dispatch, GQA contract."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (DEFAULT_BLOCK_K,
+                                                  DEFAULT_BLOCK_Q,
+                                                  flash_attention_pallas)
+from repro.kernels.flash_attention.ref import attention_ref
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def blockwise_attention_xla(q: Array, k: Array, v: Array, *,
+                            causal: bool = True, block_q: int = 512,
+                            block_k: int = 1024) -> Array:
+    """Flash-style online-softmax attention in pure XLA (no Pallas).
+
+    Same math as the Pallas kernel but expressed as a lax.scan over kv
+    blocks nested in a lax.map over q blocks, so peak memory is
+    O(b·h·block_q·block_k) instead of O(b·h·s²). This is the long-sequence
+    path for CPU dry-runs and the fallback on backends without Pallas; on
+    identical inputs it matches attention_ref to float32 roundoff
+    (asserted in tests/test_kernels_flash.py).
+    """
+    b, hq, sq, hd = q.shape
+    _, hkv, sk, _ = k.shape
+    vd = v.shape[-1]  # may differ from hd (MLA)
+    group = hq // hkv
+    scale = hd ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    offset = sk - sq
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq, nk = (sq + pq) // block_q, (sk + pk) // block_k
+    # keep operands in their input dtype (bf16 on the dry-run path) and
+    # accumulate in f32 via preferred_element_type — materializing f32
+    # copies of q/k/v doubled the measured HBM traffic
+    qg = qp.reshape(b, hkv, group, nq, block_q, hd)
+    kb = kp.reshape(b, hkv, nk, block_k, hd)
+    vb = vp.reshape(b, hkv, nk, block_k, vd)
+
+    kpos = (jnp.arange(nk)[:, None] * block_k
+            + jnp.arange(block_k)[None, :])  # (nk, bk)
+    kb_t = kb.transpose(2, 0, 1, 3, 4)
+    vb_t = vb.transpose(2, 0, 1, 3, 4)
+
+    @functools.partial(jax.checkpoint, static_argnums=(1,))
+    def q_block(qi, nk_i):
+        """One q block against its first nk_i kv blocks (causal skip)."""
+        qblk = jax.lax.dynamic_index_in_dim(qg, qi, axis=3,
+                                            keepdims=False)
+        qpos = qi * block_q + jnp.arange(block_q) + offset  # (bq,)
+
+        @jax.checkpoint
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kblk, vblk, kp_blk = inp  # (b,hkv,bk,hd) x2, (bk,)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            valid = kp_blk[None, :] < sk
+            if causal:
+                valid = valid & (kp_blk[None, :] <= qpos[:, None])
+            s = jnp.where(valid[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            acc_new = (acc * alpha[..., None]
+                       + jnp.einsum("bhgqk,bhkd->bhgqd",
+                                    p.astype(vblk.dtype), vblk,
+                                    preferred_element_type=jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, group, block_q), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, group, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, group, block_q, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb_t[:nk_i], vb_t[:nk_i], kpos[:nk_i]))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if causal:
+        # static unroll over q blocks: block qi only sees keys up to
+        # (qi+1)*block_q + offset, so its kv scan is statically shorter —
+        # ~2x fewer attention FLOPs than scanning all nk masked blocks
+        # (EXPERIMENTS.md §Perf iteration L1).
+        blocks = []
+        for qi in range(nq):
+            hi = qi * block_q + (block_q - 1) + offset
+            nk_i = min(nk, max(1, hi // block_k + 1))
+            blocks.append(q_block(jnp.int32(qi), nk_i))
+        out = jnp.stack(blocks)  # (nq, b, hkv, g, bq, vd)
+    else:
+        out = jax.lax.map(lambda qi: q_block(qi, nk), jnp.arange(nq))
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, sq + pq, vd)
+    return out[:, :, :sq].astype(q.dtype)
+
+
+# sequences at or above this length avoid the O(s^2) reference
+_BLOCKWISE_THRESHOLD = 2048
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    use_pallas: bool | None = None) -> Array:
+    """Dispatching wrapper: Pallas kernel on TPU, XLA elsewhere.
+
+    The model code (models/attention paths) calls this everywhere, so the
+    same model definition runs the Pallas kernel on hardware, the compact
+    O(s²) reference on short CPU shapes, and the blockwise XLA form on
+    long sequences (32k prefill / 4k train dry-runs would otherwise
+    materialize s² logits).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        if max(q.shape[2], k.shape[2]) >= _BLOCKWISE_THRESHOLD:
+            return blockwise_attention_xla(q, k, v, causal=causal)
+        return attention_ref(q, k, v, causal=causal)
+    if v.shape[-1] != q.shape[-1]:  # MLA: pad v for the same-dim kernel
+        vd = v.shape[-1]
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                        (0, q.shape[-1] - vd)))
+        out = flash_attention(q, k, v, causal=causal, use_pallas=True)
+        return out[..., :vd]
+
+    b, hq, sq, hd = q.shape
+    sk = k.shape[2]
+    # pad head_dim to 128 multiples, seq to block multiples
+    pd = (-hd) % 128
+    pq = (-sq) % min(DEFAULT_BLOCK_Q, max(sq, 8))
+    pk = (-sk) % min(DEFAULT_BLOCK_K, max(sk, 8))
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, pd)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, pd)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, pd)))
+    out = flash_attention_pallas(qp, kp, vp, causal=causal,
+                                 scale=hd ** -0.5,
+                                 offset=sk - sq, k_valid=sk,
+                                 interpret=not _on_tpu())
+    return out[:, :, :sq, :hd]

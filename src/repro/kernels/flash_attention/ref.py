@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for (GQA, causal) scaled-dot-product attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  scale: float | None = None) -> Array:
+    """q: (b, hq, sq, d); k: (b, hkv, sk, d); v: (b, hkv, sk, dv).
+
+    hq % hkv == 0; dv may differ from d (MLA). Softmax in float32
+    regardless of input dtype (the kernel matches this).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, hkv, group, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        sk = k.shape[2]
+        # query position i attends to keys <= i + (sk - sq) (decode offset)
+        qpos = jnp.arange(sq)[:, None] + (sk - sq)
+        kpos = jnp.arange(sk)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS_EXTRA", ""))
+# ^ MUST precede every other import (jax locks device count on first init).
+# (No `from __future__ import annotations` here for the same reason — the
+#  env var assignment must be the first statements in the file.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds abstract params / optimizer state / batch
+(ShapeDtypeStruct only — nothing is allocated), jits the step with the
+partition specs from sharding/partition.py, and compiles for the
+production mesh. Success proves the distribution config is coherent;
+memory_analysis shows it fits; cost_analysis + HLO collective parsing feed
+EXPERIMENTS.md §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get as get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import SHAPES, build
+from repro.models.config import ModelConfig
+from repro.optim import Adam
+from repro.sharding import partition
+from repro.sharding.constraints import activation_mesh
+from repro.utils import hlo as hlo_mod
+from repro.utils import hlo_cost as hlo_cost_mod
+from repro.utils import roofline as roof_mod
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+# Full-attention archs skip long_500k (O(L^2) attention; DESIGN.md §4).
+FULL_ATTN = {"glm4-9b", "llama3.2-3b", "minitron-4b", "phi3-medium-14b",
+             "moonshot-v1-16b-a3b", "deepseek-v2-236b", "qwen2-vl-7b",
+             "whisper-tiny"}
+
+# Gradient accumulation for cells whose activations exceed HBM otherwise.
+MICROBATCHES = {"deepseek-v2-236b": 4, "moonshot-v1-16b-a3b": 2}
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and arch in FULL_ATTN:
+        return False, "SKIP(full-attn): O(L^2) attention at 500k"
+    return True, ""
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float))}
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (jitted_fn, abstract_args) for one cell."""
+    cfg = get_config(arch)
+    lm = build(cfg)
+    shape = SHAPES[shape_name]
+    params_abs = lm.abstract_params()
+    pspecs = partition.param_specs(cfg, mesh, params_abs)
+    psharding = partition.named(mesh, pspecs)
+
+    batch_abs = lm.input_specs(shape)
+    bspecs = partition.batch_specs(cfg, mesh, batch_abs)
+    bsharding = jax.tree.map(
+        lambda s: jax.NamedSharding(mesh, s) if not isinstance(
+            s, jax.NamedSharding) else s,
+        bspecs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    if shape.kind == "train":
+        opt = Adam(learning_rate=1e-4, clip_global_norm=1.0)
+        train_step, _ = lm.make_train_step(
+            opt, microbatches=MICROBATCHES.get(arch, 1))
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        ospecs = partition.opt_state_specs(pspecs, mesh)
+        osharding = partition.named(mesh, ospecs)
+        fn = jax.jit(train_step,
+                     in_shardings=(psharding, osharding, bsharding),
+                     donate_argnums=(0, 1))
+        args = (params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        fn = jax.jit(lm.prefill, in_shardings=(psharding, bsharding))
+        args = (params_abs, batch_abs)
+    else:  # decode
+        state_abs = batch_abs["state"]
+        ssharding = bsharding["state"]
+        tok_sh = bsharding["tokens"]
+        pos_sh = bsharding["position"]
+        fn = jax.jit(lm.serve_step,
+                     in_shardings=(psharding, ssharding, tok_sh, pos_sh),
+                     donate_argnums=(1,))
+        args = (params_abs, state_abs, batch_abs["tokens"],
+                batch_abs["position"])
+    return cfg, shape, fn, args
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             *, save: bool = True, verbose: bool = True) -> dict:
+    ok, reason = cell_supported(arch, shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        result["status"] = reason
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_kind}] {reason}")
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        cfg, shape, fn, args = build_cell(arch, shape_name, mesh)
+        shp = SHAPES[shape_name]
+        dp = partition.mesh_axis_size(mesh, partition.dp_axes(mesh))
+        seq_shard = (shp.global_batch % dp) != 0
+        with mesh, activation_mesh(mesh, seq_shard=seq_shard):
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = _cost_dict(compiled)
+        memory = _memory_dict(compiled)
+        text = compiled.as_text()
+        # trip-count-aware analysis (XLA cost_analysis counts loop bodies
+        # once; our models scan layers/microbatches/CG — see hlo_cost.py)
+        tc = hlo_cost_mod.analyze(text)
+        coll = hlo_mod.collective_stats(text)
+        census = hlo_mod.op_census(text)
+
+        chips = mesh.devices.size
+        if shape.kind == "train":
+            mflops = roof_mod.model_flops_train(cfg, shape.seq_len,
+                                                shape.global_batch)
+        elif shape.kind == "prefill":
+            mflops = roof_mod.model_flops_prefill(cfg, shape.seq_len,
+                                                  shape.global_batch)
+        else:
+            mflops = roof_mod.model_flops_decode(cfg, shape.seq_len,
+                                                 shape.global_batch)
+        rl = roof_mod.Roofline(
+            name=f"{arch}x{shape_name}x{mesh_kind}",
+            flops=tc.flops,
+            hbm_bytes=tc.bytes_accessed,
+            collective_bytes=tc.collective_bytes,
+            model_flops=mflops, chips=chips)
+
+        result.update(
+            status="OK", seconds_lower=round(t_lower, 1),
+            seconds_compile=round(t_compile, 1), cost=cost, memory=memory,
+            trip_aware={"flops": tc.flops, "bytes": tc.bytes_accessed,
+                        "collective_bytes": tc.collective_bytes,
+                        "by_kind": tc.collective_by_kind},
+            collectives={"total_bytes": coll.total_bytes,
+                         "by_kind": coll.by_kind,
+                         "in_loop_bytes": coll.in_loops},
+            census=census, roofline=rl.row(), chips=chips,
+            model_flops=mflops,
+        )
+        if verbose:
+            mem_gb = memory.get("argument_size_in_bytes", 0) / 2 ** 30
+            tmp_gb = memory.get("temp_size_in_bytes", 0) / 2 ** 30
+            print(f"[{arch} x {shape_name} x {mesh_kind}] OK "
+                  f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+                  f"args {mem_gb:.2f}GiB temp {tmp_gb:.2f}GiB/dev | "
+                  f"flops/dev {tc.flops:.3g} | "
+                  f"coll {tc.collective_bytes/2**30:.2f}GiB | "
+                  f"bound={rl.bottleneck} | useful "
+                  f"{rl.useful_fraction:.2f}")
+    except Exception as e:
+        result["status"] = f"FAIL: {type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_kind}] FAIL: {e}")
+
+    if save:
+        RESULTS_DIR.mkdir(exist_ok=True)
+        fname = f"dryrun_{arch}_{shape_name}_{mesh_kind}.json"
+        (RESULTS_DIR / fname).write_text(json.dumps(result, indent=2,
+                                                    default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for a, s in cells:
+        for m in meshes:
+            r = run_cell(a, s, m, save=not args.no_save)
+            if str(r.get("status", "")).startswith("FAIL"):
+                failures += 1
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

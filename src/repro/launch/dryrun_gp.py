@@ -1,0 +1,145 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS_EXTRA", ""))
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Dry-run for the PAPER'S OWN workload: Simplex-GP training at scale.
+
+One full BBMM hyperparameter step (lattice build + mBCG solves + SLQ
+logdet + §4.2 gradient filtering) on a houseelectric-sized problem
+(n ~ 2M, d = 11), lowered for the production mesh:
+
+  * data points sharded over ("pod","data") — splat becomes a local
+    segment-sum followed by an all-reduce of the lattice table (the
+    paper's communication pattern: O(m·c) per CG iteration),
+  * the lattice table replicated over "model" (it is the shared inducing
+    structure); CG dot products are global psums.
+
+This is cell #41 — beyond the 40 assigned LM cells — proving the paper's
+technique itself distributes on the mesh.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_gp --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.gp import GPParams, SimplexGP, SimplexGPConfig
+from repro.gp.mll import mll_value_and_grad
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import partition
+from repro.utils import hlo as hlo_mod
+from repro.utils import roofline as roof_mod
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+
+def gp_cell(mesh_kind: str, *, n: int = 2_048_000, d: int = 11,
+            cap: int = 2_097_152, cg_iters: int = 20, probes: int = 8,
+            save: bool = True) -> dict:
+    # cap: 2x the paper's measured m for houseelectric (Table 3: 1.0M) —
+    # §Perf iteration C2 (was 4.2M; right-sizing halved the build cost)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    dp = partition.dp_axes(mesh)
+    result = {"cell": "simplexgp-houseelectric", "mesh": mesh_kind,
+              "n": n, "d": d, "cap": cap}
+    t0 = time.time()
+    try:
+        cfg = SimplexGPConfig(kernel="matern32", order=1,
+                              max_cg_iters=cg_iters, num_probes=probes,
+                              max_lanczos_iters=20,
+                              cap_factor=cap / (n * (d + 1)))
+        model = SimplexGP(cfg)
+        params = GPParams.init(d)
+
+        x_abs = jax.ShapeDtypeStruct((n, d), jnp.float32)
+        y_abs = jax.ShapeDtypeStruct((n,), jnp.float32)
+        key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        p_abs = jax.eval_shape(lambda: params)
+
+        xsh = jax.NamedSharding(mesh, jax.P(*( (dp, None) )))
+        ysh = jax.NamedSharding(mesh, jax.P(dp))
+        rep = jax.NamedSharding(mesh, jax.P())
+        psh = jax.tree.map(lambda _: rep, p_abs)
+
+        def step(p, x, y, key):
+            res = mll_value_and_grad(model, p, x, y, key, tol=1e-2)
+            return res.mll, res.grads
+
+        fn = jax.jit(step, in_shardings=(psh, xsh, ysh, rep))
+        with mesh:
+            lowered = fn.lower(p_abs, x_abs, y_abs, key_abs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in dict(ca).items()
+                if isinstance(v, (int, float))}
+        ma = compiled.memory_analysis()
+        text = compiled.as_text()
+        coll = hlo_mod.collective_stats(text)
+        chips = mesh.devices.size
+        # model flops: (cg_iters+probes-solve) filter MVMs, each
+        # O(d^2 (n+m) c) useful work (paper Table 1)
+        c_channels = 1 + probes
+        mvms = cg_iters * c_channels + cfg.max_lanczos_iters * probes
+        mflops = 4.0 * (d ** 2) * (n + cap) * mvms
+        rl = roof_mod.Roofline(
+            name=f"simplexgp x {mesh_kind}", flops=cost.get("flops", 0.0),
+            hbm_bytes=cost.get("bytes accessed", 0.0),
+            collective_bytes=float(coll.total_bytes),
+            model_flops=mflops, chips=chips)
+        result.update(
+            status="OK", seconds_lower=round(t_lower, 1),
+            seconds_compile=round(t_compile, 1), cost=cost,
+            memory={"argument_size_in_bytes": ma.argument_size_in_bytes,
+                    "temp_size_in_bytes": ma.temp_size_in_bytes},
+            collectives={"total_bytes": coll.total_bytes,
+                         "by_kind": coll.by_kind},
+            roofline=rl.row(), chips=chips)
+        print(f"[simplexgp x {mesh_kind}] OK lower {t_lower:.0f}s "
+              f"compile {t_compile:.0f}s | "
+              f"args {ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp {ma.temp_size_in_bytes/2**30:.2f}GiB/dev | "
+              f"flops/dev {cost.get('flops', 0):.3g} | "
+              f"coll {coll.total_bytes/2**20:.1f}MiB | "
+              f"bound={rl.bottleneck}")
+    except Exception as e:
+        result["status"] = f"FAIL: {type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()
+        print(f"[simplexgp x {mesh_kind}] FAIL: {e}")
+    if save:
+        RESULTS_DIR.mkdir(exist_ok=True)
+        (RESULTS_DIR / f"dryrun_simplexgp_{mesh_kind}.json").write_text(
+            json.dumps(result, indent=2, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--n", type=int, default=2_048_000)
+    ap.add_argument("--cg-iters", type=int, default=20)
+    args = ap.parse_args()
+    kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    fails = 0
+    for k in kinds:
+        r = gp_cell(k, n=args.n, cg_iters=args.cg_iters)
+        if str(r.get("status", "")).startswith("FAIL"):
+            fails += 1
+    if fails:
+        raise SystemExit(f"{fails} gp cells failed")
+
+
+if __name__ == "__main__":
+    main()

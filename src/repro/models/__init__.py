@@ -1,0 +1,4 @@
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec
+from repro.models.lm import LM, build
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeSpec", "LM", "build"]

@@ -1,0 +1,181 @@
+"""Attention blocks: GQA softmax (full / sliding-window) with KV caching.
+
+Training/prefill use the flash-attention op (Pallas on TPU, XLA ref on CPU).
+Sliding-window attention is computed *blocked* — queries in window-sized
+blocks attend to (previous, self) key blocks only — so FLOPs are O(s·w),
+not O(s²) masked, which is what makes recurrentgemma's local layers honest
+in the roofline accounting.
+
+Decode keeps either a full KV cache (b, hkv, S, hd) or, for windowed
+layers, a rolling cache of the last `window` positions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+from repro.sharding.constraints import constrain
+
+Array = jax.Array
+
+
+def attn_init(key: Array, cfg: ModelConfig, dtype,
+              d_model: int | None = None) -> dict:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": nn.dense_init(ks[0], (d, cfg.num_heads * hd), dtype),
+        "wk": nn.dense_init(ks[1], (d, cfg.num_kv_heads * hd), dtype),
+        "wv": nn.dense_init(ks[2], (d, cfg.num_kv_heads * hd), dtype),
+        "wo": nn.dense_init(ks[3], (cfg.num_heads * hd, d), dtype),
+    }
+
+
+class KVCache(NamedTuple):
+    k: Array  # (b, hkv, S, hd)   (S = window size for windowed layers)
+    v: Array  # (b, hkv, S, hd)
+    pos: Array  # (b, S) int32 absolute positions (-1 = empty), windowed only
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                  *, window: int = 0, dtype=None) -> KVCache:
+    hd = cfg.resolved_head_dim
+    s = window or seq_len
+    dt = dtype or cfg.dtype
+    return KVCache(
+        k=jnp.zeros((batch, cfg.num_kv_heads, s, hd), dt),
+        v=jnp.zeros((batch, cfg.num_kv_heads, s, hd), dt),
+        pos=jnp.full((batch, s), -1, jnp.int32),
+    )
+
+
+def _qkv(params: dict, x: Array, cfg: ModelConfig):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (x @ params["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    # -> (b, h, s, hd); heads sharded over TP when they divide
+    q = constrain(q.transpose(0, 2, 1, 3), "batch", "model", None, None)
+    k = constrain(k.transpose(0, 2, 1, 3), "batch", "model", None, None)
+    v = constrain(v.transpose(0, 2, 1, 3), "batch", "model", None, None)
+    return q, k, v
+
+
+def _rope(cfg: ModelConfig, q, k, positions, positions_3d=None):
+    if cfg.m_rope_sections is not None and positions_3d is not None:
+        q = nn.apply_m_rope(q, positions_3d, cfg.m_rope_sections,
+                            cfg.rope_theta)
+        k = nn.apply_m_rope(k, positions_3d, cfg.m_rope_sections,
+                            cfg.rope_theta)
+    else:
+        q = nn.apply_rope(q, positions, cfg.rope_theta)
+        k = nn.apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def full_attention(params: dict, x: Array, positions: Array,
+                   cfg: ModelConfig, *, positions_3d=None,
+                   causal: bool = True) -> Array:
+    """Training / prefill path, full causal attention."""
+    b, s, d = x.shape
+    q, k, v = _qkv(params, x, cfg)
+    q, k = _rope(cfg, q, k, positions, positions_3d)
+    out = flash_attention(q, k, v, causal=causal)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return out @ params["wo"]
+
+
+def windowed_attention(params: dict, x: Array, positions: Array,
+                       cfg: ModelConfig, window: int) -> Array:
+    """Blocked sliding-window attention, O(s·w) exact.
+
+    Queries in block i attend keys in blocks (i-1, i) with the causal +
+    age < window mask. Requires s % window == 0 (models pad internally).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(params, x, cfg)
+    q, k = _rope(cfg, q, k, positions)
+    pad = (-s) % window
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nb = sp // window
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    group = hq // hkv
+
+    qb = q.reshape(b, hq, nb, window, hd)
+    kb = k.reshape(b, hkv, nb, window, hd)
+    vb = v.reshape(b, hkv, nb, window, hd)
+    # keys for block i = concat(block i-1, block i)
+    k_prev = jnp.concatenate(
+        [jnp.zeros_like(kb[:, :, :1]), kb[:, :, :-1]], axis=2)
+    v_prev = jnp.concatenate(
+        [jnp.zeros_like(vb[:, :, :1]), vb[:, :, :-1]], axis=2)
+    k2 = jnp.concatenate([k_prev, kb], axis=3)  # (b,hkv,nb,2w,hd)
+    v2 = jnp.concatenate([v_prev, vb], axis=3)
+
+    qg = qb.reshape(b, hkv, group, nb, window, hd).astype(jnp.float32)
+    logits = jnp.einsum("bhgnqd,bhnkd->bhgnqk", qg,
+                        k2.astype(jnp.float32)) * (hd ** -0.5)
+    qpos = jnp.arange(window)[:, None] + window  # position inside 2w axis
+    kpos = jnp.arange(2 * window)[None, :]
+    age = qpos - kpos
+    mask = (age >= 0) & (age < window)
+    first = jnp.arange(nb) == 0  # block 0 has no previous block
+    mask_nb = mask[None, :, :] & ((~first[:, None, None])
+                                  | (kpos[None] >= window))
+    logits = jnp.where(mask_nb[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgnqk,bhnkd->bhgnqd", p, v2.astype(jnp.float32))
+    out = out.reshape(b, hq, sp, hd)[:, :, :s].astype(x.dtype)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, -1) @ params["wo"]
+
+
+def decode_attention(params: dict, x: Array, cache: KVCache,
+                     position: Array, cfg: ModelConfig, *,
+                     window: int = 0,
+                     use_rope: bool = True) -> tuple[Array, KVCache]:
+    """One-token decode. x: (b, 1, d); position: (b,) int32 absolute.
+
+    Full caches write at `position`; rolling (windowed) caches write at
+    ``position % window`` and mask by age via stored absolute positions.
+    ``use_rope=False`` for additive-positional models (Whisper).
+    """
+    b, _, d = x.shape
+    hd = cfg.resolved_head_dim
+    q, k_new, v_new = _qkv(params, x, cfg)  # (b, h, 1, hd)
+    if use_rope:
+        q = nn.apply_rope(q, position[:, None], cfg.rope_theta)
+        k_new = nn.apply_rope(k_new, position[:, None], cfg.rope_theta)
+
+    s_cache = cache.k.shape[2]
+    slot = position % window if window else position
+    bidx = jnp.arange(b)
+    k = cache.k.at[bidx, :, slot].set(k_new[:, :, 0].astype(cache.k.dtype))
+    v = cache.v.at[bidx, :, slot].set(v_new[:, :, 0].astype(cache.v.dtype))
+    pos = cache.pos.at[bidx, slot].set(position)
+
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, hd).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg,
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    age = position[:, None] - pos  # (b, s_cache)
+    valid = (pos >= 0) & (age >= 0)
+    if window:
+        valid = valid & (age < window)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * hd).astype(x.dtype)
+    return out @ params["wo"], KVCache(k=k, v=v, pos=pos)

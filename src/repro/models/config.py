@@ -1,0 +1,152 @@
+"""Model configuration shared by all 10 assigned architectures.
+
+One frozen dataclass covers the whole pool; family-specific switches select
+blocks (MoE, MLA, RWKV6 time-mix, RG-LRU, enc-dec). Exact published numbers
+live in src/repro/configs/<arch>.py; this module only defines the schema
+and the input-shape descriptors (train_4k / prefill_32k / decode_32k /
+long_500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | audio | ssm | hybrid
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- MoE ---------------------------------------------------------------
+    moe: bool = False
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0  # per-expert hidden
+    first_k_dense: int = 0  # leading dense layers (DeepSeek-V2 style)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+
+    # --- MLA (DeepSeek-V2) ---------------------------------------------------
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- MLP / misc ----------------------------------------------------------
+    mlp_kind: str = "swiglu"  # swiglu | relu2
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-5
+
+    # --- VLM (Qwen2-VL): M-RoPE sections over head_dim/2 ---------------------
+    m_rope_sections: tuple[int, ...] | None = None
+    num_vision_tokens: int = 0  # stub patch embeddings prepended to the seq
+
+    # --- hybrid (RecurrentGemma) / ssm (RWKV6) -------------------------------
+    block_pattern: tuple[str, ...] | None = None  # e.g. ("rec","rec","attn")
+    local_window: int = 2048
+    rglru_conv_width: int = 4
+    lru_width: int = 0  # 0 -> d_model
+    rwkv_head_dim: int = 64
+    rwkv_lora_rank: int = 64
+    ssm_chunk: int = 64  # chunked-parallel scan length
+
+    # --- enc-dec (Whisper) ----------------------------------------------------
+    encoder_layers: int = 0
+    encoder_frames: int = 0  # stub conv frontend output length
+    cross_attention: bool = False
+    learned_positions: bool = False
+    max_position: int = 0  # learned-positional table size (0 -> unused)
+
+    # --- attention implementation ---------------------------------------------
+    attention_kind: str = "softmax"  # softmax | lattice (beyond-paper)
+    lattice_qk_dim: int = 4  # projected q/k dim for lattice attention
+    lattice_cap_factor: float = 1.0  # lattice capacity vs n(d+1) worst case
+    sliding_window: int = 0  # 0 = full attention
+
+    # --- numerics ---------------------------------------------------------------
+    dtype: Any = jnp.bfloat16  # activation/param dtype for dry-run/TPU
+    vocab_pad_multiple: int = 256  # Megatron-style vocab padding for TP
+    remat: bool = True
+    # "full": recompute the whole layer in backward (min memory);
+    # "dots": save matmul outputs (jax dots_saveable policy) — kills the
+    # remat recompute FLOPs at ~linear activation-memory cost (§Perf L2)
+    remat_policy: str = "full"
+    scan_layers: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_recurrent(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def num_params(self) -> int:
+        """Approximate parameter count (documented per arch in configs/)."""
+        d, v = self.d_model, self.padded_vocab
+        hd = self.resolved_head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family == "ssm":  # rwkv6
+            per_layer = d * d * 4 + d * self.d_ff * 2 + d * d  # rkvg+out+cmix
+        else:
+            q = d * self.num_heads * hd
+            kv = 2 * d * self.num_kv_heads * hd
+            o = self.num_heads * hd * d
+            if self.mla:
+                q = (d * self.q_lora_rank + self.q_lora_rank
+                     * self.num_heads * (self.qk_nope_head_dim
+                                         + self.qk_rope_head_dim))
+                kv = (d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                      + self.kv_lora_rank * self.num_heads
+                      * (self.qk_nope_head_dim + self.v_head_dim))
+                o = self.num_heads * self.v_head_dim * d
+            per_layer = q + kv + o
+            if self.moe:
+                ff = 3 * d * self.moe_d_ff
+                per_layer += (self.num_experts + self.num_shared_experts) * ff
+                per_layer += d * self.num_experts  # router
+            else:
+                mult = 3 if self.mlp_kind == "swiglu" else 2
+                per_layer += mult * d * self.d_ff
+        return emb + self.num_layers * per_layer
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell from the assignment."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}

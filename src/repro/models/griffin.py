@@ -1,0 +1,119 @@
+"""RecurrentGemma / Griffin blocks (arXiv:2402.19427): RG-LRU + local attn.
+
+Recurrent block: x -> { silu(W_gate x) } * { conv1d_4(W_in x) -> RG-LRU }
+-> W_out. The RG-LRU is a *diagonal* gated linear recurrence
+
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . x_t)
+
+computed with ``jax.lax.associative_scan`` over (a, b) pairs — O(log s)
+depth, fully parallel, the TPU-native replacement for the paper's fused
+GPU scan kernel. Decode is the O(1) recurrence plus a width-4 conv state.
+
+Block pattern is (rec, rec, attn) repeating — attention is local MQA
+(window 2048, kv_heads = 1) via models/attention.py's blocked form.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+_LRU_C = 8.0
+
+
+def rglru_block_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": nn.dense_init(ks[0], (d, w), dtype),
+        "w_in": nn.dense_init(ks[1], (d, w), dtype),
+        "conv_w": nn.dense_init(ks[2], (cfg.rglru_conv_width, w), dtype,
+                                scale=0.1),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": nn.dense_init(ks[3], (w, w), dtype),
+        "w_x": nn.dense_init(ks[4], (w, w), dtype),
+        # Lambda init so a^c in [0.9, 0.999] at r=1 (paper's init range)
+        "lam": jnp.linspace(2.0, 5.5, w).astype(dtype),
+        "w_out": nn.dense_init(ks[5], (w, d), dtype),
+    }
+
+
+class RecState(NamedTuple):
+    h: Array  # (b, w) RG-LRU hidden
+    conv: Array  # (b, conv_width - 1, w) trailing conv inputs
+
+
+def init_rec_state(cfg: ModelConfig, batch: int,
+                   dtype=jnp.float32) -> RecState:
+    w = cfg.lru_width or cfg.d_model
+    return RecState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.rglru_conv_width - 1, w), dtype),
+    )
+
+
+def _causal_conv(params: dict, x: Array, prev: Array) -> Array:
+    """Depthwise causal conv, width cw. x: (b, s, w); prev: (b, cw-1, w)."""
+    cw = params["conv_w"].shape[0]
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * params["conv_w"][i]
+              for i in range(cw))
+    return out + params["conv_b"]
+
+
+def _lru_gates(params: dict, u: Array):
+    r = jax.nn.sigmoid((u @ params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_x"]).astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(
+        params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_scan(params: dict, u: Array, h0: Array) -> tuple[Array, Array]:
+    """Parallel linear recurrence over the sequence. u: (b, s, w)."""
+    a, b = _lru_gates(params, u)  # (b, s, w) each
+    # fold the initial state into the first step: h_1 = a_1 h0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def recurrent_block(params: dict, x: Array, state: RecState,
+                    cfg: ModelConfig, *, decode: bool
+                    ) -> tuple[Array, RecState]:
+    """x: (b, s, d) (s=1 for decode). Returns (out, new_state)."""
+    gate = jax.nn.silu(x @ params["w_gate"])
+    u = x @ params["w_in"]
+    cw = cfg.rglru_conv_width
+    if decode:
+        conv_in = jnp.concatenate([state.conv, u], axis=1)
+        u = _causal_conv(params, u, state.conv)
+        a, b = _lru_gates(params, u[:, 0])
+        h_last = a * state.h + b
+        h = h_last[:, None]
+        new_conv = conv_in[:, -(cw - 1):]
+    else:
+        conv_in = u
+        u = _causal_conv(params, u, state.conv.astype(u.dtype))
+        h, h_last = rglru_scan(params, u, state.h)
+        new_conv = conv_in[:, -(cw - 1):]
+    out = (h.astype(x.dtype) * gate) @ params["w_out"]
+    return out, RecState(h=h_last, conv=new_conv.astype(state.conv.dtype))

@@ -1,0 +1,207 @@
+"""Top-level model API: one object per architecture.
+
+``LM`` wraps config + family dispatch behind the five entry points the
+rest of the framework uses:
+
+    init_params(key)                     concrete params (smoke/examples)
+    abstract_params()                    ShapeDtypeStruct tree (dry-run)
+    loss_fn(params, batch)               CE (+ MoE aux), masked
+    serve_step(params, state, tok, pos)  one-token decode
+    input_specs(shape)                   ShapeDtypeStruct batch for dry-run
+
+Batches are dicts: tokens/labels/loss_mask (+frames for audio,
+vision_embeds/positions_3d for VLM, decode state + position for decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.models import transformer, whisper
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec
+from repro.optim import Adam
+
+Array = jax.Array
+
+
+def masked_ce(logits: Array, labels: Array, mask: Array) -> Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per = (logz - gold) * mask
+    return jnp.sum(per) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+
+    # ---- params ----------------------------------------------------------
+    def init_params(self, key: Array) -> dict:
+        if self.cfg.is_encdec:
+            return whisper.init_params(self.cfg, key)
+        return transformer.init_params(self.cfg, key)
+
+    def abstract_params(self) -> dict:
+        return jax.eval_shape(
+            lambda k: self.init_params(k), jax.random.PRNGKey(0))
+
+    # ---- training --------------------------------------------------------
+    def loss_fn(self, params: dict, batch: dict) -> tuple[Array, dict]:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            logits = whisper.forward(cfg, params, batch["frames"],
+                                     batch["tokens"])
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            out = transformer.forward(
+                cfg, params, batch["tokens"],
+                vision_embeds=batch.get("vision_embeds"),
+                positions_3d=batch.get("positions_3d"))
+            logits, aux = out.logits, out.aux_loss
+        ce = masked_ce(logits, batch["labels"], batch["loss_mask"])
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def make_train_step(self, optimizer: Adam | None = None,
+                        microbatches: int = 1):
+        """Build the jittable train step.
+
+        ``microbatches > 1`` enables gradient accumulation: the global
+        batch is split on dim 0 and scanned, cutting activation memory
+        ~k-fold at the cost of k sequential passes — how the 236B MoE
+        train cells fit HBM (EXPERIMENTS.md §Dry-run).
+        """
+        opt = optimizer or Adam(learning_rate=3e-4, clip_global_norm=1.0)
+
+        def train_step(params, opt_state, batch):
+            if microbatches == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    self.loss_fn, has_aux=True)(params, batch)
+            else:
+                def split(leaf):
+                    b = leaf.shape[0]
+                    assert b % microbatches == 0, (b, microbatches)
+                    return leaf.reshape((microbatches, b // microbatches)
+                                        + leaf.shape[1:])
+
+                mb = {k: (jnp.moveaxis(split(v), 0, 0) if k != "positions_3d"
+                          else jnp.moveaxis(
+                              v.reshape((3, microbatches,
+                                         v.shape[1] // microbatches)
+                                        + v.shape[2:]), 1, 0))
+                      for k, v in batch.items()}
+
+                def body(acc, one):
+                    (l, m), g = jax.value_and_grad(
+                        self.loss_fn, has_aux=True)(params, one)
+                    acc_g, acc_l = acc
+                    acc_g = jax.tree.map(jnp.add, acc_g, g)
+                    return (acc_g, acc_l + l), m
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), ms = jax.lax.scan(
+                    body, (zero, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(lambda g: g / microbatches, gsum)
+                loss = lsum / microbatches
+                metrics = jax.tree.map(lambda m: jnp.mean(m), ms)
+            params, opt_state = opt.update(grads, opt_state, params)
+            metrics = dict(metrics, loss=loss)
+            return params, opt_state, metrics
+
+        return train_step, opt
+
+    # ---- prefill / decode ---------------------------------------------------
+    def prefill(self, params: dict, batch: dict) -> Array:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            enc = whisper.encode(cfg, params, batch["frames"])
+            return enc
+        out = transformer.forward(
+            cfg, params, batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            positions_3d=batch.get("positions_3d"))
+        return out.logits
+
+    def init_decode_state(self, batch: int, max_seq: int,
+                          params: dict | None = None,
+                          enc_out: Array | None = None) -> Any:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            assert params is not None and enc_out is not None
+            return whisper.init_state(cfg, params, enc_out, max_seq)
+        return transformer.init_decode_state(cfg, batch, max_seq)
+
+    def abstract_decode_state(self, batch: int, max_seq: int) -> Any:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            frames = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+            return jax.eval_shape(
+                lambda p, f: whisper.init_state(
+                    cfg, p, f, max_seq), self.abstract_params(), frames)
+        return jax.eval_shape(
+            lambda: transformer.init_decode_state(cfg, batch, max_seq))
+
+    def serve_step(self, params: dict, state: Any, tokens: Array,
+                   position: Array):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return whisper.serve_step(cfg, params, state, tokens, position)
+        return transformer.serve_step(cfg, params, state, tokens, position)
+
+    # ---- dry-run input specs -------------------------------------------------
+    def input_specs(self, shape: ShapeSpec | str,
+                    global_batch: int | None = None) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        cfg = self.cfg
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        b = global_batch or shape.global_batch
+        s = shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+
+        if shape.kind in ("train", "prefill"):
+            if cfg.is_encdec:
+                # encoder consumes stub frames; decoder sees s tokens
+                # (prefill_32k = 32k-frame encode + 1 decoder token)
+                dec_s = 1 if shape.kind == "prefill" else min(s, 4096)
+                frames = min(s, 32_768) if shape.kind == "prefill" \
+                    else cfg.encoder_frames
+                batch = {
+                    "frames": sds((b, frames, cfg.d_model), cfg.dtype),
+                    "tokens": sds((b, dec_s), i32),
+                }
+            elif cfg.family == "vlm" and cfg.num_vision_tokens:
+                nv = min(cfg.num_vision_tokens, s // 4)
+                st = s - nv
+                batch = {
+                    "tokens": sds((b, st), i32),
+                    "vision_embeds": sds((b, nv, cfg.d_model), cfg.dtype),
+                    "positions_3d": sds((3, b, s), i32),
+                }
+            else:
+                batch = {"tokens": sds((b, s), i32)}
+            if shape.kind == "train":
+                ls = (batch["tokens"].shape[1] if cfg.is_encdec
+                      else s if cfg.family != "vlm" else s)
+                batch["labels"] = sds((b, ls), i32)
+                batch["loss_mask"] = sds((b, ls), jnp.float32)
+            return batch
+
+        # decode: one new token against a seq_len-deep state
+        return {
+            "tokens": sds((b, 1), i32),
+            "position": sds((b,), i32),
+            "state": self.abstract_decode_state(b, s),
+        }
+
+
+def build(cfg: ModelConfig) -> LM:
+    return LM(cfg=cfg)

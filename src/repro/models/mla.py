@@ -1,0 +1,150 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Faithful structure: queries go through a LoRA bottleneck (q_lora_rank);
+keys/values share one compressed latent c_kv (kv_lora_rank) plus a single
+shared RoPE key head (qk_rope_head_dim). Per head, q/k split into a no-RoPE
+part (qk_nope_head_dim, up-projected from the latent) and the RoPE part.
+
+The decode cache stores ONLY (c_kv, k_rope): (kv_lora + rope_dim) floats
+per token — 576 for the assigned config vs 2*128*128 for vanilla MHA; this
+compression is the architecture's entire point and what makes the
+decode_32k dry-run cell fit memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+from repro.sharding.constraints import constrain
+
+Array = jax.Array
+
+
+def mla_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk = cfg.qk_nope_head_dim
+    qr = cfg.qk_rope_head_dim
+    vh = cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": nn.dense_init(ks[0], (d, cfg.q_lora_rank), dtype),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), dtype),
+        "wq_b": nn.dense_init(ks[1], (cfg.q_lora_rank, h * (qk + qr)),
+                              dtype),
+        "wkv_a": nn.dense_init(ks[2], (d, cfg.kv_lora_rank + qr), dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        "wk_b": nn.dense_init(ks[3], (cfg.kv_lora_rank, h * qk), dtype),
+        "wv_b": nn.dense_init(ks[4], (cfg.kv_lora_rank, h * vh), dtype),
+        "wo": nn.dense_init(ks[5], (h * vh, d), dtype),
+    }
+
+
+class MLACache(NamedTuple):
+    c_kv: Array  # (b, S, kv_lora_rank)
+    k_rope: Array  # (b, S, qk_rope_head_dim)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                   dtype=None) -> MLACache:
+    dt = dtype or cfg.dtype
+    return MLACache(
+        c_kv=jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dt),
+        k_rope=jnp.zeros((batch, seq_len, cfg.qk_rope_head_dim), dt),
+    )
+
+
+def _project_q(params, x, cfg, positions):
+    b, s, _ = x.shape
+    h, qk, qr = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = nn.rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = (cq @ params["wq_b"]).reshape(b, s, h, qk + qr)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = nn.apply_rope(q_rope.transpose(0, 2, 1, 3), positions,
+                           cfg.rope_theta).transpose(0, 2, 1, 3)
+    return q_nope, q_rope  # (b, s, h, *)
+
+
+def _latents(params, x, cfg, positions):
+    ckv_kr = x @ params["wkv_a"]  # (b, s, lora + qr)
+    c_kv = nn.rms_norm(ckv_kr[..., :cfg.kv_lora_rank], params["kv_norm"],
+                       cfg.norm_eps)
+    k_rope = ckv_kr[..., cfg.kv_lora_rank:]  # single shared rope head
+    k_rope = nn.apply_rope(k_rope[:, None], positions,
+                           cfg.rope_theta)[:, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(params: dict, x: Array, positions: Array,
+                  cfg: ModelConfig) -> Array:
+    """Training/prefill MLA (full causal)."""
+    b, s, d = x.shape
+    h, qk, qr, vh = (cfg.num_heads, cfg.qk_nope_head_dim,
+                     cfg.qk_rope_head_dim, cfg.v_head_dim)
+    q_nope, q_rope = _project_q(params, x, cfg, positions)
+    c_kv, k_rope = _latents(params, x, cfg, positions)
+    k_nope = (c_kv @ params["wk_b"]).reshape(b, s, h, qk)
+    v = (c_kv @ params["wv_b"]).reshape(b, s, h, vh)
+
+    # assemble full q/k (nope ++ rope, rope shared across heads) and run
+    # the blockwise flash path — never materializes the (s, s) logits
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)  # (b,s,h,qk+qr)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, qr))], axis=-1)
+    q_sh = constrain(q_full.transpose(0, 2, 1, 3),
+                     "batch", "model", None, None)
+    k_sh = constrain(k_full.transpose(0, 2, 1, 3),
+                     "batch", "model", None, None)
+    v_sh = constrain(v.transpose(0, 2, 1, 3),
+                     "batch", "model", None, None)
+    out = flash_attention(q_sh, k_sh, v_sh, causal=True)
+    out = out.transpose(0, 2, 1, 3).astype(x.dtype)
+    return out.reshape(b, s, h * vh) @ params["wo"]
+
+
+def mla_decode(params: dict, x: Array, cache: MLACache, position: Array,
+               cfg: ModelConfig) -> tuple[Array, MLACache]:
+    """One-token decode against the latent cache.
+
+    Uses the absorbed-matmul trick: q_nope is pushed through wk_b^T once
+    (q_latent = q_nope @ wk_b per head) so attention scores are computed
+    directly against the cached c_kv — no per-step K up-projection.
+    """
+    b, _, d = x.shape
+    h, qk, qr, vh = (cfg.num_heads, cfg.qk_nope_head_dim,
+                     cfg.qk_rope_head_dim, cfg.v_head_dim)
+    r = cfg.kv_lora_rank
+    q_nope, q_rope = _project_q(params, x, cfg, position[:, None])
+    c_new, kr_new = _latents(params, x, cfg, position[:, None])
+
+    bidx = jnp.arange(b)
+    c_kv = cache.c_kv.at[bidx, position].set(
+        c_new[:, 0].astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[bidx, position].set(
+        kr_new[:, 0].astype(cache.k_rope.dtype))
+
+    wk_b = params["wk_b"].reshape(r, h, qk)
+    # absorb: q_lat[b,h,r] = sum_d q_nope[b,h,d] wk_b[r,h,d]
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = (qk + qr) ** -0.5
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat,
+                         c_kv.astype(jnp.float32))
+              + jnp.einsum("bhd,bsd->bhs",
+                           q_rope[:, 0].astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+    valid = jnp.arange(c_kv.shape[1])[None, :] <= position[:, None]
+    logits = jnp.where(valid[:, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    # attend in latent space then up-project once: out_lat (b, h, r)
+    out_lat = jnp.einsum("bhs,bsr->bhr", p, c_kv.astype(jnp.float32))
+    wv_b = params["wv_b"].reshape(r, h, vh)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat, wv_b.astype(jnp.float32))
+    out = out.reshape(b, 1, h * vh).astype(x.dtype)
+    return out @ params["wo"], MLACache(c_kv=c_kv, k_rope=k_rope)

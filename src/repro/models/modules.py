@@ -1,0 +1,187 @@
+"""Shared neural-net primitives for the architecture pool.
+
+Everything is a pure function over explicit parameter dicts (no framework
+modules): params are nested dicts of jax.Arrays, so the sharding layer
+(sharding/partition.py) can mirror the tree with PartitionSpecs and the
+checkpoint layer can treat it as a flat list of named tensors.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key: Array, shape: tuple[int, ...], dtype,
+               scale: float | None = None) -> Array:
+    """Truncated-normal fan-in init (MaxText-style)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if len(shape) == 3:  # (experts, in, out)
+        fan_in = shape[1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key: Array, shape: tuple[int, ...], dtype) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array,
+               eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight + bias).astype(x.dtype)
+
+
+def group_norm(x: Array, weight: Array, bias: Array, num_groups: int,
+               eps: float = 1e-5) -> Array:
+    """Per-head norm used by RWKV6 time-mix output. x: (..., H*K)."""
+    shape = x.shape
+    xf = x.astype(jnp.float32).reshape(*shape[:-1], num_groups, -1)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(shape)
+    return (out * weight + bias).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (half-rotate / NeoX convention)
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 1e4) -> Array:
+    """x: (b, h, s, hd); positions: (b, s) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # b1sf
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x: Array, positions_3d: Array, sections: tuple[int, ...],
+                 theta: float = 1e4) -> Array:
+    """Qwen2-VL M-RoPE. x: (b, h, s, hd); positions_3d: (3, b, s).
+
+    The hd/2 frequency slots are partitioned into `sections` (t, h, w);
+    each section rotates by its own positional stream. Text tokens carry
+    identical (t,h,w) positions, recovering 1-D RoPE exactly.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    assert sum(sections) == hd // 2, (sections, hd)
+    # build per-slot positions: (b, s, hd/2)
+    parts = []
+    for i, sec in enumerate(sections):
+        parts.append(jnp.broadcast_to(
+            positions_3d[i][:, :, None],
+            positions_3d.shape[1:] + (sec,)))
+    pos = jnp.concatenate(parts, axis=-1).astype(jnp.float32)
+    angles = pos[:, None, :, :] * freqs  # (b, 1, s, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> Array:
+    """Whisper-style fixed sinusoidal embeddings. -> (length, dim)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-math.log(10_000.0)
+                  * jnp.arange(dim // 2, dtype=jnp.float32) / (dim // 2 - 1))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key: Array, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wi_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "wi_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "wo": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    # relu2 (Minitron squared-ReLU) and gelu (Whisper) are non-gated
+    return {
+        "wi": dense_init(ks[0], (d_model, d_ff), dtype),
+        "wo": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(params: dict, x: Array, kind: str) -> Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["wi_gate"]) * (x @ params["wi_up"])
+        return h @ params["wo"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ params["wi"]) @ params["wo"]
+    h = jax.nn.relu(x @ params["wi"])
+    return (h * h) @ params["wo"]
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding with Megatron-style padded vocab
+# --------------------------------------------------------------------------
+
+
+def embed_lookup(embedding: Array, tokens: Array) -> Array:
+    return jnp.take(embedding, tokens, axis=0)
+
+
+def logits_from_hidden(x: Array, embedding: Array, head: Array | None,
+                       vocab_size: int) -> Array:
+    """x: (..., d) -> (..., padded_vocab); padded columns masked to -inf."""
+    table = embedding if head is None else head
+    logits = (x.astype(jnp.float32)
+              @ table.T.astype(jnp.float32)) if head is None else (
+        x.astype(jnp.float32) @ table.astype(jnp.float32))
+    padded = logits.shape[-1]
+    if padded > vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < vocab_size, logits, -1e30)
+    return logits
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean next-token CE in f32. logits: (b, s, v); labels: (b, s)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,199 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Time-mixing recurrence per head (state S in R^{K x V}):
+
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,     w_t = exp(-exp(ww_t))
+
+Training uses the **chunked-parallel** form (the TPU adaptation — the
+reference CUDA kernel is a serial per-token loop; a serial scan would
+starve the MXU). Within a chunk of length C, with P_t = prod_{i<=t} w_i:
+
+    scores[t,s] = <r_t . P_{t-1}, k_s / P_s>   (strictly causal s < t)
+    y = scores @ V + (r . P_shift) @ S_in + diag(<r_t . u, k_t>) v_t
+    S_out = diag(P_C) S_in + (K . P_C/P)^T V
+
+so a 4096-token sequence becomes 4096/C batched (C x C)(C x V) matmuls —
+MXU-shaped — plus a short scan over chunks carrying S. Decode is the O(1)
+recurrence on the cached state.
+
+Token-shift / ddlerp and the channel-mix block follow the Finch paper
+(LoRA-modulated interpolation between x_t and x_{t-1}).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def tmix_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    rank = cfg.rwkv_lora_rank
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_base": jnp.zeros((d,), dtype),
+        "mu": jnp.zeros((5, d), dtype),
+        "lora_a": nn.dense_init(ks[0], (d, 5 * rank), dtype),
+        "lora_b": nn.dense_init(ks[1], (5, rank, d), dtype, scale=0.01),
+        "wr": nn.dense_init(ks[2], (d, d), dtype),
+        "wk": nn.dense_init(ks[3], (d, d), dtype),
+        "wv": nn.dense_init(ks[4], (d, d), dtype),
+        "wg": nn.dense_init(ks[5], (d, d), dtype),
+        "wo": nn.dense_init(ks[6], (d, d), dtype),
+        "w0": jnp.full((d,), -6.0, dtype),  # decay bias: w ~ exp(-exp(-6))
+        "wd_a": nn.dense_init(ks[7], (d, rank), dtype),
+        "wd_b": nn.dense_init(ks[8], (rank, d), dtype, scale=0.01),
+        "u": jnp.zeros((h, hk), dtype),  # "bonus" for the current token
+        "gn_w": jnp.ones((d,), dtype),
+        "gn_b": jnp.zeros((d,), dtype),
+    }
+
+
+def cmix_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dtype),
+        "mu_r": jnp.zeros((d,), dtype),
+        "wk": nn.dense_init(ks[0], (d, f), dtype),
+        "wv": nn.dense_init(ks[1], (f, d), dtype),
+        "wr": nn.dense_init(ks[2], (d, d), dtype),
+    }
+
+
+class RWKVState(NamedTuple):
+    s: Array  # (b, h, K, V) wkv state
+    shift_t: Array  # (b, d) last token for time-mix shift
+    shift_c: Array  # (b, d) last token for channel-mix shift
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RWKVState:
+    d = cfg.d_model
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    return RWKVState(
+        s=jnp.zeros((batch, h, hk, hk), jnp.float32),
+        shift_t=jnp.zeros((batch, d), dtype),
+        shift_c=jnp.zeros((batch, d), dtype),
+    )
+
+
+def _ddlerp(params: dict, x: Array, x_prev: Array):
+    """Finch data-dependent token-shift. Returns dict name -> mixed input."""
+    dx = x_prev - x
+    xxx = x + dx * params["mu_base"]
+    rank = params["lora_a"].shape[1] // 5
+    lora = jnp.tanh(xxx @ params["lora_a"])
+    lora = lora.reshape(*lora.shape[:-1], 5, rank)
+    mods = jnp.einsum("...nr,nrd->...nd", lora, params["lora_b"])
+    out = {}
+    for i, name in enumerate(_MIX_NAMES):
+        mix = params["mu"][i] + mods[..., i, :]
+        out[name] = x + dx * mix
+    return out
+
+
+def _rkvgw(params: dict, x: Array, x_prev: Array, cfg: ModelConfig):
+    b = x.shape[0]
+    s = x.shape[1] if x.ndim == 3 else 1
+    d = cfg.d_model
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    mixed = _ddlerp(params, x, x_prev)
+    r = mixed["r"] @ params["wr"]
+    k = mixed["k"] @ params["wk"]
+    v = mixed["v"] @ params["wv"]
+    g = jax.nn.silu(mixed["g"] @ params["wg"])
+    ww = params["w0"] + jnp.tanh(mixed["w"] @ params["wd_a"]) @ params["wd_b"]
+    logw = -jnp.exp(ww.astype(jnp.float32))  # log decay in (-inf, 0)
+    hd = lambda t: t.reshape(b, s, h, hk).astype(jnp.float32)
+    return hd(r), hd(k), hd(v), g, logw.reshape(b, s, h, hk)
+
+
+def tmix_chunked(params: dict, x: Array, state: RWKVState,
+                 cfg: ModelConfig) -> tuple[Array, RWKVState]:
+    """Chunked-parallel time mixing over a full sequence. x: (b, s, d)."""
+    b, s, d = x.shape
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    c = min(cfg.ssm_chunk, s)
+    assert s % c == 0, (s, c)
+    x_prev = jnp.concatenate(
+        [state.shift_t[:, None, :], x[:, :-1]], axis=1)
+    r, k, v, g, logw = _rkvgw(params, x, x_prev, cfg)
+    u = params["u"].astype(jnp.float32)
+
+    nc = s // c
+    resh = lambda t: t.reshape(b, nc, c, h, hk).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(logw)  # (nc,b,h,c,K)
+
+    mask = jnp.tril(jnp.ones((c, c), jnp.float32), -1)  # strictly causal
+
+    def chunk_step(s_in, inp):
+        rr, kk, vv, lw = inp  # (b, h, c, K)
+        lp = jnp.cumsum(lw, axis=2)  # log P_t
+        p_shift = jnp.exp(jnp.concatenate(
+            [jnp.zeros_like(lp[:, :, :1]), lp[:, :, :-1]], axis=2))
+        r_dec = rr * p_shift  # r_t . P_{t-1}
+        k_dec = kk * jnp.exp(-lp)  # k_s / P_s
+        scores = jnp.einsum("bhtk,bhsk->bhts", r_dec, k_dec) * mask
+        bonus = jnp.einsum("bhtk,bhtk->bht", rr * u[None, :, None, :], kk)
+        y = (jnp.einsum("bhts,bhsv->bhtv", scores, vv)
+             + jnp.einsum("bhtk,bhkv->bhtv", r_dec, s_in)
+             + bonus[..., None] * vv)
+        p_total = jnp.exp(lp[:, :, -1])  # (b, h, K)
+        k_tail = kk * jnp.exp(lp[:, :, -1:, :] - lp)  # k_s . P_C/P_s
+        s_out = (p_total[..., None] * s_in
+                 + jnp.einsum("bhsk,bhsv->bhkv", k_tail, vv))
+        return s_out, y
+
+    s_fin, ys = jax.lax.scan(chunk_step, state.s, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, d)
+    y = nn.group_norm(y.astype(x.dtype), params["gn_w"], params["gn_b"], h)
+    out = (y * g) @ params["wo"]
+    return out, RWKVState(s=s_fin, shift_t=x[:, -1], shift_c=state.shift_c)
+
+
+def tmix_decode(params: dict, x: Array, state: RWKVState,
+                cfg: ModelConfig) -> tuple[Array, RWKVState]:
+    """One-token recurrence. x: (b, 1, d)."""
+    b, _, d = x.shape
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    r, k, v, g, logw = _rkvgw(params, x, state.shift_t[:, None], cfg)
+    r, k, v, logw = (t[:, 0] for t in (r, k, v, logw))  # (b, h, K)
+    u = params["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, state.s + u[None, :, :, None] * kv)
+    s_new = jnp.exp(logw)[..., None] * state.s + kv
+    y = y.reshape(b, 1, d)
+    y = nn.group_norm(y.astype(x.dtype), params["gn_w"], params["gn_b"], h)
+    out = (y * g) @ params["wo"]
+    return out, RWKVState(s=s_new, shift_t=x[:, 0], shift_c=state.shift_c)
+
+
+def cmix(params: dict, x: Array, state: RWKVState, cfg: ModelConfig,
+         *, decode: bool) -> tuple[Array, RWKVState]:
+    """Channel mixing (squared-ReLU gated MLP with token shift)."""
+    if decode:
+        x_prev = state.shift_c[:, None]
+    else:
+        x_prev = jnp.concatenate(
+            [state.shift_c[:, None, :], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * params["mu_k"]
+    xr = x + dx * params["mu_r"]
+    kk = jax.nn.relu(xk @ params["wk"])
+    out = jax.nn.sigmoid(xr @ params["wr"]) * ((kk * kk) @ params["wv"])
+    return out, state._replace(shift_c=x[:, -1])

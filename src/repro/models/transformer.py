@@ -1,0 +1,440 @@
+"""Unified decoder-only LM covering dense / MoE / MLA / VLM / SSM / hybrid.
+
+One parameter tree + forward/serve pair per family, assembled from the
+block libraries (attention.py, moe.py, mla.py, rwkv6.py, griffin.py,
+lattice_attention.py). Layers are **stacked and scanned** (`lax.scan` over
+a leading L axis on every layer parameter) so the lowered HLO contains one
+layer body regardless of depth — this keeps the 80-cell dry-run
+compile-able and is what MaxText does in production. Heterogeneous stacks
+(DeepSeek's leading dense layers, Griffin's (rec, rec, attn) period) are
+split into one scan per homogeneous segment.
+
+All functions are pure; params are nested dicts mirrored 1:1 by
+sharding/partition.py's PartitionSpec trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import griffin as griffin_mod
+from repro.models import lattice_attention as lattn_mod
+from repro.models import mla as mla_mod
+from repro.models import modules as nn
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.config import ModelConfig
+from repro.sharding.constraints import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# layer init by family
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer_init(key, cfg: ModelConfig, dtype, *, use_moe: bool):
+    ks = jax.random.split(key, 2)
+    if cfg.mla:
+        attn = mla_mod.mla_init(ks[0], cfg, dtype)
+    elif cfg.attention_kind == "lattice":
+        attn = lattn_mod.lattice_attn_init(ks[0], cfg, dtype)
+    else:
+        attn = attn_mod.attn_init(ks[0], cfg, dtype)
+    if use_moe:
+        mlp = moe_mod.moe_init(ks[1], cfg, dtype)
+    else:
+        mlp = nn.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn,
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": mlp,
+    }
+
+
+def _rwkv_layer_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1_w": jnp.ones((cfg.d_model,), dtype),
+        "ln1_b": jnp.zeros((cfg.d_model,), dtype),
+        "tmix": rwkv_mod.tmix_init(ks[0], cfg, dtype),
+        "ln2_w": jnp.ones((cfg.d_model,), dtype),
+        "ln2_b": jnp.zeros((cfg.d_model,), dtype),
+        "cmix": rwkv_mod.cmix_init(ks[1], cfg, dtype),
+    }
+
+
+def _griffin_sub_init(key, cfg: ModelConfig, dtype, kind: str):
+    ks = jax.random.split(key, 2)
+    if kind == "rec":
+        inner = griffin_mod.rglru_block_init(ks[0], cfg, dtype)
+    else:
+        inner = attn_mod.attn_init(ks[0], cfg, dtype)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "inner": inner,
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": nn.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                           dtype),
+    }
+
+
+def _griffin_period_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "rec1": _griffin_sub_init(ks[0], cfg, dtype, "rec"),
+        "rec2": _griffin_sub_init(ks[1], cfg, dtype, "rec"),
+        "attn": _griffin_sub_init(ks[2], cfg, dtype, "attn"),
+    }
+
+
+def _stack(init_fn, key, n: int):
+    if n == 0:
+        return None
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key: Array) -> dict:
+    dtype = cfg.dtype
+    k_embed, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": nn.embed_init(k_embed, (cfg.padded_vocab, cfg.d_model),
+                               dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = nn.dense_init(k_head,
+                                       (cfg.d_model, cfg.padded_vocab),
+                                       dtype)
+    if cfg.family == "ssm":
+        params["embed_ln_w"] = jnp.ones((cfg.d_model,), dtype)
+        params["embed_ln_b"] = jnp.zeros((cfg.d_model,), dtype)
+        params["layers"] = _stack(
+            lambda k: _rwkv_layer_init(k, cfg, dtype), k_layers,
+            cfg.num_layers)
+    elif cfg.family == "hybrid":
+        periods = cfg.num_layers // 3
+        tail = cfg.num_layers - periods * 3
+        params["periods"] = _stack(
+            lambda k: _griffin_period_init(k, cfg, dtype), k_layers,
+            periods)
+        tails = {}
+        tk = jax.random.split(k_extra, max(tail, 1))
+        for i in range(tail):
+            tails[f"rec{i}"] = _griffin_sub_init(tk[i], cfg, dtype, "rec")
+        params["tail"] = tails
+    else:  # dense / moe / vlm backbones
+        n_dense = cfg.first_k_dense if cfg.moe else cfg.num_layers
+        n_moe = cfg.num_layers - n_dense if cfg.moe else 0
+        if cfg.moe and n_dense:
+            params["dense_layers"] = _stack(
+                lambda k: _dense_layer_init(k, cfg, dtype, use_moe=False),
+                k_extra, n_dense)
+        params["layers"] = _stack(
+            lambda k: _dense_layer_init(k, cfg, dtype,
+                                        use_moe=cfg.moe),
+            k_layers, n_moe if cfg.moe else cfg.num_layers)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+class ForwardOut(NamedTuple):
+    logits: Array
+    aux_loss: Array
+
+
+def _dense_block(layer, x, positions, cfg: ModelConfig, *, use_moe: bool,
+                 positions_3d=None):
+    h = nn.rms_norm(x, layer["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        a = mla_mod.mla_attention(layer["attn"], h, positions, cfg)
+    elif cfg.attention_kind == "lattice":
+        a = lattn_mod.lattice_attention(layer["attn"], h, cfg)
+    elif cfg.sliding_window:
+        a = attn_mod.windowed_attention(layer["attn"], h, positions, cfg,
+                                        cfg.sliding_window)
+    else:
+        a = attn_mod.full_attention(layer["attn"], h, positions, cfg,
+                                    positions_3d=positions_3d)
+    sp = a.shape[1] > 1  # train/prefill: Megatron-SP on block outputs so
+    # the row-parallel TP psum lowers as reduce-scatter, not all-reduce
+    # (§Perf B8: measured all-reduce was the dominant collective)
+    if sp:
+        a = constrain(a, "batch", "seq_tp", None)
+    x = x + a
+    h = nn.rms_norm(x, layer["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        out = moe_mod.moe_apply(layer["mlp"], h, cfg)
+        m, aux = out.y, out.aux_loss
+    else:
+        m = nn.mlp_apply(layer["mlp"], h, cfg.mlp_kind)
+    if sp:
+        m = constrain(m, "batch", "seq_tp", None)
+    out_x = x + m
+    if sp:
+        out_x = constrain(out_x, "batch", "seq_tp", None)
+    return out_x, aux
+
+
+def _griffin_sub(layer, x, positions, state, cfg: ModelConfig, kind: str,
+                 *, decode: bool):
+    h = nn.rms_norm(x, layer["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        inner, state = griffin_mod.recurrent_block(
+            layer["inner"], h, state, cfg, decode=decode)
+    else:
+        if decode:
+            inner, state = attn_mod.decode_attention(
+                layer["inner"], h, state, positions, cfg,
+                window=cfg.local_window)
+        else:
+            inner = attn_mod.windowed_attention(
+                layer["inner"], h, positions, cfg, cfg.local_window)
+    x = x + inner
+    h = nn.rms_norm(x, layer["ln2"], cfg.norm_eps)
+    out_x = x + nn.mlp_apply(layer["mlp"], h, cfg.mlp_kind)
+    if not decode:
+        out_x = constrain(out_x, "batch", "seq_tp", None)
+    return out_x, state
+
+
+def _rwkv_block(layer, x, state, cfg: ModelConfig, *, decode: bool):
+    h = nn.layer_norm(x, layer["ln1_w"], layer["ln1_b"], cfg.norm_eps)
+    if decode:
+        t, state = rwkv_mod.tmix_decode(layer["tmix"], h, state, cfg)
+    else:
+        t, state = rwkv_mod.tmix_chunked(layer["tmix"], h, state, cfg)
+    x = x + t
+    h = nn.layer_norm(x, layer["ln2_w"], layer["ln2_b"], cfg.norm_eps)
+    c, state = rwkv_mod.cmix(layer["cmix"], h, state, cfg, decode=decode)
+    out_x = x + c
+    if not decode:
+        out_x = constrain(out_x, "batch", "seq_tp", None)
+    return out_x, state
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
+            vision_embeds: Array | None = None,
+            positions_3d: Array | None = None) -> ForwardOut:
+    """Full-sequence forward. tokens: (b, s_text) int32.
+
+    VLM: `vision_embeds` (b, nv, d) are prepended (stub frontend);
+    positions_3d (3, b, s_total) provides M-RoPE streams.
+    """
+    x = nn.embed_lookup(params["embed"], tokens)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", "seq", None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "ssm":
+        x = nn.layer_norm(x, params["embed_ln_w"], params["embed_ln_b"],
+                          cfg.norm_eps)
+        state0 = rwkv_mod.init_state(cfg, b, dtype=x.dtype)
+
+        def body(x, layer):
+            out, _ = _rwkv_block(layer, x, state0, cfg, decode=False)
+            return out, None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    elif cfg.family == "hybrid":
+        rec0 = griffin_mod.init_rec_state(cfg, b, dtype=x.dtype)
+
+        def body(x, period):
+            x, _ = _griffin_sub(period["rec1"], x, positions, rec0, cfg,
+                                "rec", decode=False)
+            x, _ = _griffin_sub(period["rec2"], x, positions, rec0, cfg,
+                                "rec", decode=False)
+            x, _ = _griffin_sub(period["attn"], x, positions, None, cfg,
+                                "attn", decode=False)
+            return x, None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["periods"])
+        for name in sorted(params.get("tail", {})):
+            x, _ = _griffin_sub(params["tail"][name], x, positions, rec0,
+                                cfg, "rec", decode=False)
+    else:
+        if cfg.moe and params.get("dense_layers") is not None:
+            def dbody(x, layer):
+                out, _ = _dense_block(layer, x, positions, cfg,
+                                      use_moe=False)
+                return out, None
+
+            x, _ = jax.lax.scan(_maybe_remat(dbody, cfg), x,
+                                params["dense_layers"])
+
+        def body(carry, layer):
+            x, aux = carry
+            out, a = _dense_block(layer, x, positions, cfg,
+                                  use_moe=cfg.moe,
+                                  positions_3d=positions_3d)
+            return (out, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(_maybe_remat(body, cfg),
+                                         (x, aux_total), params["layers"])
+
+    x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = nn.logits_from_hidden(x, params["embed"],
+                                   params.get("head"), cfg.vocab_size)
+    logits = constrain(logits, "batch", "seq", "model")
+    return ForwardOut(logits=logits, aux_loss=aux_total)
+
+
+# ---------------------------------------------------------------------------
+# decode: state init + one-token step
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> Any:
+    """Per-layer stacked decode state (KV caches / recurrent states)."""
+    if cfg.family == "ssm":
+        one = rwkv_mod.init_state(cfg, batch, dtype=cfg.dtype)
+        return jax.tree.map(
+            lambda leaf: jnp.broadcast_to(
+                leaf[None], (cfg.num_layers,) + leaf.shape), one)
+    if cfg.family == "hybrid":
+        periods = cfg.num_layers // 3
+        tail = cfg.num_layers - periods * 3
+        rec = griffin_mod.init_rec_state(cfg, batch, dtype=cfg.dtype)
+        kv = attn_mod.init_kv_cache(cfg, batch, max_seq,
+                                    window=cfg.local_window)
+        period_state = {
+            "rec1": jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None],
+                                           (periods,) + l.shape), rec),
+            "rec2": jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None],
+                                           (periods,) + l.shape), rec),
+            "attn": jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None],
+                                           (periods,) + l.shape), kv),
+        }
+        return {"periods": period_state,
+                "tail": {f"rec{i}": rec for i in range(tail)}}
+    if cfg.mla:
+        one = mla_mod.init_mla_cache(cfg, batch, max_seq)
+        n_moe = cfg.num_layers - cfg.first_k_dense
+        out = {"layers": jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n_moe,) + l.shape), one)}
+        if cfg.first_k_dense:
+            out["dense_layers"] = jax.tree.map(
+                lambda l: jnp.broadcast_to(
+                    l[None], (cfg.first_k_dense,) + l.shape), one)
+        return out
+    one = attn_mod.init_kv_cache(cfg, batch, max_seq)
+    n_scan = cfg.num_layers - (cfg.first_k_dense if cfg.moe else 0)
+    out = {"layers": jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (n_scan,) + l.shape), one)}
+    if cfg.moe and cfg.first_k_dense:
+        out["dense_layers"] = jax.tree.map(
+            lambda l: jnp.broadcast_to(
+                l[None], (cfg.first_k_dense,) + l.shape), one)
+    return out
+
+
+def _decode_dense_block(layer, x, cache, position, cfg: ModelConfig, *,
+                        use_moe: bool):
+    h = nn.rms_norm(x, layer["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        a, cache = mla_mod.mla_decode(layer["attn"], h, cache, position,
+                                      cfg)
+    else:
+        a, cache = attn_mod.decode_attention(layer["attn"], h, cache,
+                                             position, cfg)
+    x = x + a
+    h = nn.rms_norm(x, layer["ln2"], cfg.norm_eps)
+    if use_moe:
+        out = moe_mod.moe_apply(layer["mlp"], h, cfg)
+        m = out.y
+    else:
+        m = nn.mlp_apply(layer["mlp"], h, cfg.mlp_kind)
+    return x + m, cache
+
+
+def serve_step(cfg: ModelConfig, params: dict, state: Any, tokens: Array,
+               position: Array) -> tuple[Array, Any]:
+    """One decode step. tokens: (b, 1); position: (b,) absolute index."""
+    x = nn.embed_lookup(params["embed"], tokens)
+    b = x.shape[0]
+
+    if cfg.family == "ssm":
+        x = nn.layer_norm(x, params["embed_ln_w"], params["embed_ln_b"],
+                          cfg.norm_eps)
+
+        def body(x, inp):
+            layer, st = inp
+            out, st = _rwkv_block(layer, x, st, cfg, decode=True)
+            return out, st
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    elif cfg.family == "hybrid":
+        def body(x, inp):
+            period, st = inp
+            x, s1 = _griffin_sub(period["rec1"], x, position, st["rec1"],
+                                 cfg, "rec", decode=True)
+            x, s2 = _griffin_sub(period["rec2"], x, position, st["rec2"],
+                                 cfg, "rec", decode=True)
+            x, sa = _griffin_sub(period["attn"], x, position, st["attn"],
+                                 cfg, "attn", decode=True)
+            return x, {"rec1": s1, "rec2": s2, "attn": sa}
+
+        x, new_periods = jax.lax.scan(
+            body, x, (params["periods"], state["periods"]))
+        new_tail = {}
+        for name in sorted(params.get("tail", {})):
+            x, st = _griffin_sub(params["tail"][name], x, position,
+                                 state["tail"][name], cfg, "rec",
+                                 decode=True)
+            new_tail[name] = st
+        new_state = {"periods": new_periods, "tail": new_tail}
+    else:
+        new_state = dict(state)
+        if cfg.moe and params.get("dense_layers") is not None:
+            def dbody(x, inp):
+                layer, st = inp
+                out, st = _decode_dense_block(layer, x, st, position, cfg,
+                                              use_moe=False)
+                return out, st
+
+            x, nd = jax.lax.scan(dbody, x, (params["dense_layers"],
+                                            state["dense_layers"]))
+            new_state["dense_layers"] = nd
+
+        def body(x, inp):
+            layer, st = inp
+            out, st = _decode_dense_block(layer, x, st, position, cfg,
+                                          use_moe=cfg.moe)
+            return out, st
+
+        x, nl = jax.lax.scan(body, x, (params["layers"], state["layers"]))
+        new_state["layers"] = nl
+
+    x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = nn.logits_from_hidden(x, params["embed"],
+                                   params.get("head"), cfg.vocab_size)
+    logits = constrain(logits, "batch", None, "model")
+    return logits, new_state

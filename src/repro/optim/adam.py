@@ -1,0 +1,83 @@
+"""Adam optimizer over arbitrary pytrees (no optax in this container).
+
+Used by both the GP hyperparameter loop (paper Appendix A: Adam, lr 0.1)
+and the LM train steps. Stateless-functional: ``init`` builds the moment
+pytree, ``update`` returns (new_params, new_state). Supports global-norm
+gradient clipping and decoupled weight decay (AdamW) for the LM path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: Array  # () int32
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    learning_rate: float | Callable[[Array], Array] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_global_norm: float | None = None
+    # moments kept in f32 even for bf16 params (mixed-precision training)
+    moment_dtype: Any = jnp.float32
+
+    def init(self, params: PyTree) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params))
+
+    def _lr(self, step: Array) -> Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads: PyTree, state: AdamState,
+               params: PyTree) -> tuple[PyTree, AdamState]:
+        step = state.step + 1
+        if self.clip_global_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_global_norm /
+                                jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(self.moment_dtype),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) *
+            jnp.square(g.astype(self.moment_dtype)),
+            state.nu, grads)
+        t = step.astype(jnp.float32)
+        mhat_scale = 1.0 / (1.0 - b1 ** t)
+        vhat_scale = 1.0 / (1.0 - b2 ** t)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            u = (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(self.moment_dtype)
+            return (p.astype(self.moment_dtype) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (plain callables: step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_fraction: float = 0.1):
+    """Linear warmup -> cosine decay to final_fraction * peak (MaxText-style)."""
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_fraction + (1 - final_fraction) * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return sched
+
+
+def step_decay(lr: float, decay: float, every: int):
+    """Paper-style: Adam lr 0.1 with optional halving for GP hyperparams."""
+
+    def sched(step):
+        k = (step // every).astype(jnp.float32)
+        return jnp.asarray(lr, jnp.float32) * (decay ** k)
+
+    return sched

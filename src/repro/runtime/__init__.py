@@ -1,0 +1,6 @@
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.straggler import StepTimer, StepWatchdog
+from repro.runtime import compression, elastic
+
+__all__ = ["CheckpointManager", "StepTimer", "StepWatchdog",
+           "compression", "elastic"]

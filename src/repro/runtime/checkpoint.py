@@ -1,0 +1,166 @@
+"""Sharding-agnostic checkpointing: atomic, async, keep-k.
+
+Design (the orbax pattern, dependency-free):
+
+  * params/opt-state are flattened to named leaves ("layers/attn/wq", ...)
+    and written as raw .npy blobs + a JSON manifest with step metadata.
+  * arrays are host-gathered to their LOGICAL (unsharded) shape, so a
+    checkpoint written on one mesh restores onto ANY mesh — elastic
+    restarts (runtime/elastic.py) just re-shard at load.
+  * writes go to ``<dir>/step_<k>.tmp`` then ``os.replace`` to the final
+    name — a crash mid-write never corrupts the latest checkpoint.
+  * an async writer thread overlaps serialization with training; ``wait``
+    joins before the next save (single-buffered, like orbax's async).
+  * keep-last-k + keep-best (by a metric the caller passes) retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            arr = arr.astype(np.float32)  # lossless; .npy can't store bf16
+        flat[name] = arr
+    return flat
+
+
+def _unflatten_like(template: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if name not in flat:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = flat[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {name}: ckpt {arr.shape} vs "
+                f"model {leaf.shape}")
+        import jax.numpy as jnp
+        leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | pathlib.Path, *, keep_last: int = 3,
+                 keep_best: int = 1, async_write: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.keep_best = keep_best
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, *, metric: float | None = None,
+             extra: dict | None = None):
+        flat = _flatten(tree)  # host-gather on the caller thread (cheap)
+        self.wait()
+
+        def write():
+            try:
+                self._write(step, flat, metric, extra or {})
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        if self.async_write:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def _write(self, step: int, flat: dict, metric, extra):
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        manifest = {"step": step, "metric": metric, "extra": extra,
+                    "leaves": {}}
+        for name, arr in flat.items():
+            fname = name.replace("/", "__") + ".npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"][name] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype)}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore -----------------------------------------------------------
+    def steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob(
+            "step_*") if p.is_dir() and not p.name.endswith(".tmp"))
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def manifest(self, step: int) -> dict:
+        return json.loads(
+            (self.dir / f"step_{step:08d}" / "manifest.json").read_text())
+
+    def restore(self, step: int, template: PyTree,
+                shardings: PyTree | None = None) -> PyTree:
+        """Load logical arrays and (optionally) place them sharded.
+
+        ``shardings`` may target a DIFFERENT mesh than the one the
+        checkpoint was saved under — this is the elastic-restart path.
+        """
+        d = self.dir / f"step_{step:08d}"
+        man = self.manifest(step)
+        flat = {name: np.load(d / meta["file"])
+                for name, meta in man["leaves"].items()}
+        tree = _unflatten_like(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return tree
+
+    # -- retention ------------------------------------------------------------
+    def _gc(self):
+        steps = self.steps()
+        if len(steps) <= self.keep_last:
+            return
+        # collect best-k by metric (None metrics never counted as best)
+        metrics = {}
+        for s in steps:
+            try:
+                metrics[s] = self.manifest(s).get("metric")
+            except Exception:
+                metrics[s] = None
+        scored = [s for s in steps if metrics[s] is not None]
+        best = set(sorted(scored, key=lambda s: metrics[s])
+                   [: self.keep_best])
+        keep = set(steps[-self.keep_last:]) | best
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(self.dir / f"step_{s:08d}",
+                              ignore_errors=True)

@@ -1,0 +1,86 @@
+"""Error-feedback int8 gradient compression for the DP all-reduce.
+
+At 512 chips the llama-3B gradient all-reduce moves ~6.4 GiB/step/device
+(bf16); int8 with per-block scales cuts that 2x with negligible quality
+loss WHEN error feedback is applied: the quantization residual is carried
+into the next step (Seide et al. 2014; standard in large-scale setups).
+
+``compressed_psum`` is built for shard_map'd training loops: quantize ->
+psum int32 accumulators -> dequantize, with the residual returned to the
+caller to add into the next step's gradients. A pure-jit variant
+(``compress / decompress``) is exposed for the checkpoint-size use-case.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: Array  # int8 payload, padded to _BLOCK
+    scale: Array  # f32 per-block scales
+    n: int  # original length
+
+
+def compress(x: Array) -> Compressed:
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % _BLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    safe = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(flat / safe), -127, 127).astype(jnp.int8)
+    return Compressed(q=q, scale=scale, n=n)
+
+
+def decompress(c: Compressed, shape, dtype) -> Array:
+    flat = (c.q.astype(jnp.float32) * c.scale).reshape(-1)[: c.n]
+    return flat.reshape(shape).astype(dtype)
+
+
+def quantization_residual(x: Array, c: Compressed) -> Array:
+    return x - decompress(c, x.shape, x.dtype)
+
+
+def compressed_psum(grads, residuals, axis_name: str):
+    """Error-feedback int8 psum over `axis_name` (inside shard_map).
+
+    grads/residuals: pytrees of per-device partial gradients. Returns
+    (mean_grads, new_residuals). The int8 payloads are summed in int32 to
+    avoid overflow across <= 2^23 devices.
+    """
+
+    def one(g, r):
+        g = g + r.astype(g.dtype)  # error feedback
+        c = compress(g)
+        # re-quantize every device onto a COMMON per-block scale (the
+        # ring-wide max) so int32 summation is exact w.r.t. that scale
+        common = jax.lax.pmax(c.scale, axis_name)
+        ratio = c.scale / jnp.maximum(common, 1e-30)
+        q2 = jnp.clip(jnp.round(c.q.astype(jnp.float32) * ratio),
+                      -127, 127).astype(jnp.int32)
+        summed = jax.lax.psum(q2, axis_name)
+        nparts = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        mean = (summed.astype(jnp.float32) * common / nparts)
+        mean = mean.reshape(-1)[: c.n].reshape(g.shape).astype(g.dtype)
+        # residual = what I handed in minus what the sum credits me with
+        mine = (q2.astype(jnp.float32) * common).reshape(-1)[: c.n]
+        new_r = g - mine.reshape(g.shape).astype(g.dtype)
+        return mean, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    means = jax.tree.unflatten(treedef, [m for m, _ in out])
+    resid0 = jax.tree.unflatten(treedef, [r for _, r in out])
+    return means, resid0
+
+
+def init_residuals(grads_template):
+    return jax.tree.map(jnp.zeros_like, grads_template)

@@ -1,0 +1,72 @@
+"""Elastic restart: resume a run on a different mesh shape.
+
+Checkpoints are logical (runtime/checkpoint.py), so elasticity reduces to:
+
+  1. pick the new mesh from the devices that are actually healthy,
+  2. rebuild partition specs for that mesh,
+  3. restore + re-shard (device_put against the new NamedShardings),
+  4. resume the data pipeline at the saved step (sources are pure
+     functions of the step — data/tokens.py — so no iterator state).
+
+``choose_mesh_shape`` implements the policy: keep the model axis as large
+as TP requires, fold every remaining healthy device into the data axis —
+shrinking DP changes only throughput, never correctness, because the
+global batch is re-sharded (gradient accumulation covers the remainder).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models.config import ModelConfig
+from repro.runtime.checkpoint import CheckpointManager
+from repro.sharding import partition
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    mesh: Mesh
+    dp_size: int
+    accum_steps: int  # gradient-accumulation factor to keep global batch
+
+
+def choose_mesh_shape(num_devices: int, *, model_parallel: int,
+                      global_batch: int, prev_dp: int) -> tuple[int, int]:
+    """(data, accum): largest dp <= devices/model that divides batch."""
+    assert num_devices % model_parallel == 0, (num_devices, model_parallel)
+    dp = num_devices // model_parallel
+    while dp > 1 and global_batch % dp != 0:
+        dp -= 1
+    accum = max(1, prev_dp // dp)
+    return dp, accum
+
+
+def make_elastic_mesh(devices, *, model_parallel: int) -> Mesh:
+    devices = np.asarray(devices)
+    dp = devices.size // model_parallel
+    grid = devices[: dp * model_parallel].reshape(dp, model_parallel)
+    return Mesh(grid, ("data", "model"))
+
+
+def resume(cfg: ModelConfig, manager: CheckpointManager, template: Any,
+           devices=None, *, model_parallel: int = 16,
+           global_batch: int = 256) -> tuple[Any, int, ElasticPlan]:
+    """Restore the latest checkpoint onto whatever devices remain."""
+    devices = list(devices if devices is not None else jax.devices())
+    mesh = make_elastic_mesh(devices, model_parallel=min(
+        model_parallel, len(devices)))
+    dp = mesh.shape["data"]
+    specs = partition.param_specs(cfg, mesh, template)
+    shardings = partition.named(mesh, specs)
+    step = manager.latest_step()
+    if step is None:
+        raise FileNotFoundError("no checkpoint to resume from")
+    tree = manager.restore(step, template, shardings)
+    plan = ElasticPlan(mesh=mesh, dp_size=dp,
+                       accum_steps=max(1, global_batch // max(dp, 1)
+                                       // max(global_batch // dp, 1)))
+    return tree, step, plan

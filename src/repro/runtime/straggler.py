@@ -1,0 +1,85 @@
+"""Straggler / hang mitigation for the host-side training loop.
+
+TPU pods fail in two modes the loop must survive: a *slow* step (network
+blip, preemption warning, input stall) and a *hung* step (device wedged).
+The watchdog times every step against a deadline derived from a running
+percentile of recent step times; on breach it fires a callback that can
+  * skip the step deterministically (data/pipeline.py Prefetcher.skip —
+    every host skips the same step id, keeping data order consistent),
+  * checkpoint-and-exit so the scheduler can restart elastically
+    (runtime/elastic.py).
+
+Used by launch/train.py; unit-tested with fake clocks in
+tests/test_runtime.py.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Callable
+
+
+class StepWatchdog:
+    def __init__(self, *, window: int = 50, multiplier: float = 3.0,
+                 min_deadline: float = 10.0,
+                 on_breach: Callable[[int, float], None] | None = None):
+        self.window = window
+        self.multiplier = multiplier
+        self.min_deadline = min_deadline
+        self.on_breach = on_breach
+        self._times: collections.deque = collections.deque(maxlen=window)
+        self._timer: threading.Timer | None = None
+        self._breached: list[tuple[int, float]] = []
+
+    @property
+    def deadline(self) -> float:
+        if not self._times:
+            return float("inf")  # no baseline yet -> never fire
+        baseline = sorted(self._times)[len(self._times) // 2]  # median
+        return max(self.min_deadline, self.multiplier * baseline)
+
+    def start_step(self, step: int):
+        self.cancel()
+        d = self.deadline
+        if d == float("inf"):
+            return
+
+        def fire():
+            self._breached.append((step, d))
+            if self.on_breach:
+                self.on_breach(step, d)
+
+        self._timer = threading.Timer(d, fire)
+        self._timer.daemon = True
+        self._timer.start()
+
+    def end_step(self, seconds: float):
+        self.cancel()
+        self._times.append(seconds)
+
+    def cancel(self):
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+    @property
+    def breaches(self) -> list[tuple[int, float]]:
+        return list(self._breached)
+
+
+class StepTimer:
+    """Context manager wiring the watchdog into the train loop."""
+
+    def __init__(self, watchdog: StepWatchdog, step: int):
+        self.watchdog = watchdog
+        self.step = step
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        self.watchdog.start_step(self.step)
+        return self
+
+    def __exit__(self, *exc):
+        self.watchdog.end_step(time.perf_counter() - self.t0)
+        return False

@@ -1,0 +1,3 @@
+from repro.sharding import partition
+
+__all__ = ["partition"]

@@ -1,0 +1,97 @@
+"""Explicit collective patterns: overlap-friendly TP matmul + DP psum.
+
+jit+GSPMD already inserts collectives from the partition specs; these
+shard_map building blocks exist for the cases where *schedule* matters and
+we want it under our control rather than the partitioner's:
+
+  * ``collective_matmul_ag`` — all-gather-matmul overlap: instead of one
+    blocking all-gather of the (seq-sharded) activations followed by a
+    full matmul, rotate shards around the TP ring with ppermute and
+    matmul each chunk as it arrives — comm hides behind compute when
+    t_chunk_matmul >= t_permute (the standard TPU "collective matmul").
+  * ``psum_scatter_matmul`` — the row-parallel dual: matmul chunk-wise
+    and reduce-scatter via ring accumulation.
+  * ``dp_psum_compressed`` — DP gradient all-reduce with the int8
+    error-feedback codec (runtime/compression.py).
+
+These are opt-in (launch/train.py ``--overlap tp_ring``); the dry-run
+baselines use plain GSPMD so §Perf can compare the two schedules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+def collective_matmul_ag(x_shard: Array, w_shard: Array,
+                         axis_name: str) -> Array:
+    """(x all-gathered over axis) @ w, overlapped via a ppermute ring.
+
+    x_shard: (m/k, d) this device's sequence shard (k = axis size).
+    w_shard: (d, f/k) this device's column shard.
+    Returns (m, f/k): the full-sequence activation for the local columns.
+
+    Ring schedule: at step t we matmul the shard that originated t hops
+    away while simultaneously permuting the buffer to the next neighbor —
+    XLA's latency-hiding scheduler overlaps the two because there is no
+    data dependence between ppermute(t) and matmul(t).
+    """
+    k = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % k) for i in range(k)]
+    m_loc = x_shard.shape[0]
+    out = jnp.zeros((k * m_loc, w_shard.shape[1]), x_shard.dtype)
+    out = jax.lax.pvary(out, (axis_name,))  # carry is device-varying
+
+    def body(t, carry):
+        buf, out = carry
+        # which device's shard is currently in `buf`
+        src = (idx - t) % k
+        piece = buf @ w_shard
+        out = jax.lax.dynamic_update_slice(out, piece,
+                                           (src * m_loc, 0))
+        buf = jax.lax.ppermute(buf, axis_name, perm)
+        return buf, out
+
+    buf, out = jax.lax.fori_loop(0, k, body, (x_shard, out))
+    return out
+
+
+def psum_scatter_matmul(x_full: Array, w_shard: Array,
+                        axis_name: str) -> Array:
+    """Row-parallel matmul with ring reduce-scatter of the output.
+
+    x_full: (m, d/k) local columns of the activations.
+    w_shard: (d/k, f) this device's row shard.
+    Returns (m/k, f): this device's scatter shard of x @ w (summed).
+    """
+    k = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    partial = x_full @ w_shard  # (m, f) partial sum (needs cross-device +)
+    m_loc = partial.shape[0] // k
+    # downward ring: device i+1 -> i; the accumulator visiting device i at
+    # step t carries chunk (i + t + 1) mod k, so after k-1 hops device i
+    # holds the fully-summed chunk i.
+    perm = [(i, (i - 1) % k) for i in range(k)]
+
+    def chunk(j):
+        return jax.lax.dynamic_slice(
+            partial, (j * m_loc, 0), (m_loc, partial.shape[1]))
+
+    def body(t, acc):
+        acc = jax.lax.ppermute(acc, axis_name, perm)
+        return acc + chunk((idx + t + 1) % k)
+
+    acc = jax.lax.fori_loop(1, k, body, chunk((idx + 1) % k))
+    return acc
+
+
+def dp_psum_compressed(grads, residuals, axis_name: str):
+    from repro.runtime.compression import compressed_psum
+    return compressed_psum(grads, residuals, axis_name)

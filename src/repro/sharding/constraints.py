@@ -1,0 +1,79 @@
+"""Activation sharding constraints usable from pure model code.
+
+Model functions stay mesh-agnostic: they call ``constrain(x, "batch",
+None, "vocab")`` with LOGICAL axis names; the launcher installs a mesh +
+logical->physical mapping around tracing (``with activation_mesh(mesh):``)
+and the call becomes a with_sharding_constraint. With no mesh installed
+(CPU smoke tests) it is a no-op, so the same model code runs everywhere.
+
+Logical axes:
+  batch   -> ("pod", "data")  [or ("data",)]
+  seq     -> "data" when sequence-sharding (long-context batch=1 cells)
+  model   -> "model" (TP: heads / ff / vocab shards)
+
+A constraint is applied only when the dimension divides the physical axis
+— the same divisibility guard as partition.py.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current() -> tuple[Mesh | None, dict]:
+    return (getattr(_state, "mesh", None),
+            getattr(_state, "logical", {}))
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh | None, *, seq_shard: bool = False):
+    """Install `mesh` for constrain() during tracing/execution."""
+    if mesh is None:
+        yield
+        return
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    logical = {
+        "batch": dp,
+        "seq": ("data",) if seq_shard else None,
+        # Megatron-style sequence parallelism: the residual stream between
+        # layers is seq-sharded over the TP axis (memory: scan carries
+        # shrink 16x; GSPMD inserts the SP all-gather before attention).
+        "seq_tp": ("model",),
+        "model": ("model",),
+    }
+    prev = _current()
+    _state.mesh, _state.logical = mesh, logical
+    try:
+        yield
+    finally:
+        _state.mesh, _state.logical = prev
+
+
+def constrain(x: Any, *axes: str | None) -> Any:
+    """with_sharding_constraint by logical axis names (no-op without mesh).
+    """
+    mesh, logical = _current()
+    if mesh is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = []
+    for dim, name in zip(x.shape, axes):
+        if name is None:
+            spec.append(None)
+            continue
+        phys = logical.get(name)
+        if phys is None:
+            spec.append(None)
+            continue
+        size = 1
+        for a in phys:
+            size *= mesh.shape[a]
+        spec.append(tuple(phys) if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

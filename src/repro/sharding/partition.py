@@ -1,0 +1,275 @@
+"""Partition specs for every architecture family (DP / TP / EP / SP).
+
+Axis semantics on the production mesh (launch/mesh.py):
+  ("pod", "data")  — data parallelism (gradient all-reduce spans pods)
+  "model"          — Megatron-style tensor parallelism + expert parallelism
+
+Rules (applied only when the dimension divides the mesh axis — for
+non-dividing dims, e.g. llama's 24 heads on model=16, the *flat* fused dim
+is sharded instead when it divides; otherwise the leaf is replicated and
+GSPMD inserts the reshard):
+
+  embed (V, D)                 -> (model, None)      vocab-parallel
+  head  (D, V)                 -> (None, model)
+  attn wq/wk/wv (D, H*hd)      -> (None, model)      column-parallel
+  attn wo (H*hd, D)            -> (model, None)      row-parallel (psum)
+  mlp wi* (D, F) / wo (F, D)   -> (None, model) / (model, None)
+  MoE expert stacks (E, ., .)  -> (model, None, None) expert-parallel
+  MLA b-projections            -> column-parallel on the head dim
+  RWKV projections             -> column/row like attention
+  RG-LRU w_gate/w_in/w_a/w_x   -> column-parallel on the LRU width
+  norms / biases / tiny LoRAs  -> replicated
+
+Batches shard the global batch over ("pod","data"); when global_batch is
+not divisible (long_500k, batch=1) the *sequence* dimension is sharded
+over "data" instead (context/sequence parallelism).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(mesh: Mesh, axis, size: int):
+    """axis if size divides the axis extent, else None (replicate)."""
+    return axis if size % mesh_axis_size(mesh, axis) == 0 else None
+
+
+def _col(mesh, in_dim, out_dim):
+    return P(None, _div(mesh, "model", out_dim))
+
+
+def _row(mesh, in_dim, out_dim):
+    return P(_div(mesh, "model", in_dim), None)
+
+
+FSDP_MIN_ELEMENTS = 1 << 20  # leaves below this stay DP-replicated
+
+
+def _apply_fsdp(spec: P, shape, mesh: Mesh, *, skip_dims=(0,)) -> P:
+    """ZeRO/FSDP: shard the largest still-replicated dim over "data".
+
+    Parameters + optimizer moments then scale with the full mesh instead
+    of only the TP axis (deepseek-236B: 150 GiB/dev -> ~9 GiB/dev). GSPMD
+    inserts the per-layer all-gather (classic FSDP schedule). The leading
+    stacked-layer dim is never sharded (it is scanned over)."""
+    n = 1
+    for d in shape:
+        n *= d
+    if n < FSDP_MIN_ELEMENTS:
+        return spec
+    used = {a for part in spec if part is not None
+            for a in (part if isinstance(part, tuple) else (part,))}
+    if "data" in used:
+        return spec
+    dsize = mesh_axis_size(mesh, "data")
+    cands = [i for i in range(len(shape))
+             if spec[i] is None and i not in skip_dims
+             and shape[i] % dsize == 0]
+    if not cands:
+        return spec
+    best = max(cands, key=lambda i: shape[i])
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    parts[best] = "data"
+    return P(*parts)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params: Any,
+                *, fsdp: bool = True) -> Any:
+    """PartitionSpec tree mirroring the params tree (works on abstract)."""
+
+    def leaf_spec(path, leaf) -> P:
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        joined = "/".join(names)
+        shape = leaf.shape
+        # stacked layers add a leading L axis; compute the "local" shape
+        stacked = any(n in ("layers", "periods", "dense_layers",
+                            "enc_layers", "dec_layers") for n in names)
+        ls = shape[1:] if stacked else shape
+        pad = (None,) if stacked else ()
+
+        def mk(*spec):
+            return P(*(pad + spec))
+
+        if name == "embed":
+            return P(_div(mesh, "model", shape[0]), None)
+        if name == "head":
+            return P(None, _div(mesh, "model", shape[1]))
+        # --- MoE expert stacks -------------------------------------------------
+        # Experts shard over "data" (EP inside the DP group, DeepSeek
+        # deployment style) and the CONTRACTING dim over "model" (TP), so
+        # expert weights are fully sharded in place — no FSDP re-gather
+        # per scan step (that cost 100+ GiB/step on the 236B cells).
+        if "mlp" in names and name in ("wi_gate", "wi_up") \
+                and len(ls) == 3:
+            return mk(_div(mesh, "data", ls[0]),
+                      _div(mesh, "model", ls[1]), None)
+        if "mlp" in names and name == "wo" and len(ls) == 3:
+            return mk(_div(mesh, "data", ls[0]), None,
+                      _div(mesh, "model", ls[2]))
+        if name == "router":
+            return mk(None, None)
+        # --- column/row parallel projections --------------------------------
+        col_names = {"wq", "wk", "wv", "wi", "wi_gate", "wi_up", "wq_b",
+                     "wk_b", "wv_b", "w_gate", "w_in", "w_a", "w_x",
+                     "wd_a"}
+        row_names = {"wo", "w_out", "wv_cmix"}
+        if name in col_names and len(ls) == 2:
+            return mk(None, _div(mesh, "model", ls[1]))
+        if name in row_names and len(ls) == 2:
+            return mk(_div(mesh, "model", ls[0]), None)
+        if "cmix" in names and name == "wv" and len(ls) == 2:
+            return mk(_div(mesh, "model", ls[0]), None)
+        if name == "conv_w":
+            return mk(None, _div(mesh, "model", ls[1]))
+        if name in ("conv_b", "lam"):
+            return mk(_div(mesh, "model", ls[0]))
+        if name == "u" and len(ls) == 2:  # rwkv bonus (h, hk)
+            return mk(_div(mesh, "model", ls[0]), None)
+        if name in ("gn_w", "gn_b", "w0"):
+            return mk(_div(mesh, "model", ls[0]))
+        # everything else (norms, biases, LoRA factors, mu's): replicated
+        return mk(*([None] * len(ls)))
+
+    def leaf_spec_fsdp(path, leaf) -> P:
+        spec = leaf_spec(path, leaf)
+        if not fsdp:
+            return spec
+        names = [p.key for p in path if hasattr(p, "key")]
+        stacked = any(n in ("layers", "periods", "dense_layers",
+                            "enc_layers", "dec_layers") for n in names)
+        parts = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        return _apply_fsdp(P(*parts), leaf.shape, mesh,
+                           skip_dims=(0,) if stacked else ())
+
+    return jax.tree_util.tree_map_with_path(leaf_spec_fsdp, params)
+
+
+# ---------------------------------------------------------------------------
+# batch + decode-state specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: dict,
+                *, seq_shard: bool | None = None) -> dict:
+    """Specs for a train/prefill batch dict of ShapeDtypeStructs.
+
+    seq_shard: shard the sequence dim over "data" when the batch dim
+    does not divide DP (long-context, batch=1). Auto-detected if None.
+    """
+    dp = dp_axes(mesh)
+    dp_size = mesh_axis_size(mesh, dp)
+    b = batch["tokens"].shape[0]
+    if seq_shard is None:
+        seq_shard = (b % dp_size) != 0
+    bspec = None if seq_shard else dp
+    sspec = ("data" if seq_shard else None)
+
+    def spec_of(key, leaf):
+        nd = len(leaf.shape)
+        if key == "positions_3d":  # (3, b, s)
+            return P(None, bspec, sspec)
+        if key in ("tokens", "labels", "loss_mask"):  # (b, s)
+            s = leaf.shape[1] if nd > 1 else None
+            if nd == 1:
+                return P(bspec)
+            return P(bspec, sspec if _div(mesh, "data", s) else None)
+        if key == "frames":  # (b, F, d)
+            return P(bspec, sspec, None)
+        if key == "vision_embeds":  # (b, nv, d)
+            return P(bspec, None, None)
+        if key == "position":  # (b,)
+            return P(bspec)
+        raise ValueError(f"no batch spec rule for {key}")
+
+    return {k: spec_of(k, v) if k != "state" else
+            decode_state_specs(cfg, mesh, v) for k, v in batch.items()}
+
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, state: Any) -> Any:
+    """Mirror the decode-state tree with specs.
+
+    Convention: leaves are either stacked (L, b, ...) or per-layer
+    (b, ...); the batch dim is sharded over DP when divisible, KV heads /
+    RWKV heads / LRU width over "model" when divisible.
+    """
+    dp = dp_axes(mesh)
+    dp_size = mesh_axis_size(mesh, dp)
+
+    def leaf_spec(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        joined = "/".join(names)
+        shape = leaf.shape
+        # find the batch dim: first dim not equal to a leading stack axis
+        # heuristic: stacked leaves have ndim >= 3 and dim1 == batch
+        # encode rule by leaf name instead:
+        name = names[-1] if names else ""
+        stacked = len(shape) >= 2
+        # KVCache: k/v (L, b, hkv, S, hd) or (b, hkv, S, hd); pos (L, b, S)
+        msize = mesh_axis_size(mesh, "model")
+
+        def bspec_at(i, model_dim=None, seq_dim=None):
+            """Shard batch at i over DP; model_dim over TP when it
+            divides, else seq_dim over TP (sequence-sharded KV cache —
+            the GQA archs here have kv_heads < 16)."""
+            spec = [None] * len(shape)
+            if shape[i] % dp_size == 0:
+                spec[i] = dp
+            if model_dim is not None and shape[model_dim] % msize == 0:
+                spec[model_dim] = "model"
+            elif seq_dim is not None and shape[seq_dim] % msize == 0:
+                spec[seq_dim] = "model"
+            return P(*spec)
+
+        if name in ("k", "v"):
+            return bspec_at(len(shape) - 4, model_dim=len(shape) - 3,
+                            seq_dim=len(shape) - 2)
+        if name == "pos":
+            return bspec_at(len(shape) - 2)
+        if name in ("c_kv", "k_rope"):  # MLA (L, b, S, r)
+            return bspec_at(len(shape) - 3, seq_dim=len(shape) - 2)
+        if name == "s":  # rwkv state (L, b, h, K, V)
+            return bspec_at(len(shape) - 4, model_dim=len(shape) - 3)
+        if name in ("shift_t", "shift_c"):  # (L, b, d)
+            return bspec_at(len(shape) - 2, model_dim=len(shape) - 1)
+        if name == "h":  # rg-lru hidden (L?, b, w)
+            return bspec_at(len(shape) - 2, model_dim=len(shape) - 1)
+        if name == "conv":  # (L?, b, cw-1, w)
+            return bspec_at(len(shape) - 3, model_dim=len(shape) - 1)
+        if name in ("cross_k", "cross_v"):  # (L, b, hkv, F, hd)
+            return bspec_at(len(shape) - 4, model_dim=len(shape) - 3)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, state)
+
+
+def named(mesh: Mesh, tree_specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_spec_tree: Any, mesh: Mesh) -> Any:
+    """Adam state mirrors params (mu/nu same layout; step replicated)."""
+    from repro.optim.adam import AdamState
+    return AdamState(step=P(), mu=param_spec_tree, nu=param_spec_tree)

@@ -1,0 +1,106 @@
+"""HLO text analysis: collective bytes + op census for the roofline.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+(optimized, partitioned) HLO: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute contributes its operand
+bytes. Shapes in the partitioned module are PER-DEVICE shapes, so summed
+bytes are per-device traffic per step — exactly the numerator of the
+collective roofline term.
+"""
+from __future__ import annotations
+
+import collections
+import re
+from typing import NamedTuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """bytes of 'f32[128,256]' / tuple '(f32[2], s32[3])' fragments."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class CollectiveStats(NamedTuple):
+    total_bytes: int
+    by_kind: dict  # kind -> (count, bytes)
+    in_loops: int  # collectives appearing inside while-loop bodies
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum output bytes of every collective op (per-device traffic).
+
+    While-loop bodies (scanned layers) execute trip-count times; the
+    caller scales loop-resident collectives by the layer count — we report
+    them separately so utils/roofline.py can do that.
+    """
+    by_kind: dict = collections.defaultdict(lambda: [0, 0])
+    total = 0
+    in_loops = 0
+    current_computation = ""
+    loop_computations = set()
+    # identify while-body computations to attribute loop-resident traffic
+    for m in re.finditer(r"while\(.*?\).*?body=([%\w.\-]+)", hlo_text):
+        loop_computations.add(m.group(1).lstrip("%"))
+
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:%)?([\w.\-]+)\s*(?:\([^)]*\))?\s*{", ls)
+        if m and ("{" in ls) and ("=" not in ls):
+            current_computation = m.group(1)
+        opm = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+"
+                       r"([\w\-]+)\(", ls)
+        if not opm:
+            continue
+        shape_str, op = opm.group(1), opm.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):
+                kind = c
+                break
+        if kind is None:
+            continue
+        b = shape_bytes(shape_str)
+        by_kind[kind][0] += 1
+        by_kind[kind][1] += b
+        total += b
+        if current_computation in loop_computations:
+            in_loops += b
+    return CollectiveStats(total_bytes=total,
+                           by_kind={k: tuple(v) for k, v in by_kind.items()},
+                           in_loops=in_loops)
+
+
+def op_census(hlo_text: str, ops: tuple[str, ...] = ("fusion", "dot",
+                                                     "custom-call",
+                                                     "while", "reshape",
+                                                     "transpose")) -> dict:
+    census: dict = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+([\w\-]+)\(",
+                     line)
+        if m:
+            op = m.group(1)
+            for want in ops:
+                if op == want:
+                    census[op] += 1
+    return dict(census)

@@ -1,0 +1,155 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+cost_analysis() on the SPMD-partitioned executable reports PER-DEVICE
+flops/bytes (the partitioned module has per-device shapes), so the
+per-chip division is already done — we divide by per-chip peaks directly.
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) over HLO_FLOPs measures how
+much compiled compute is "useful" (catches remat/dispatch waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+# TPU v5e, per chip
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link (usable, one direction)
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device HLO bytes accessed
+    collective_bytes: float  # per-device collective traffic
+    model_flops: float  # analytic useful flops (global)
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs): 1.0 = no wasted compute."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline (upper bound on MFU)."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS_BF16 * t)
+
+    def row(self) -> dict:
+        return dict(name=self.name, t_compute=self.t_compute,
+                    t_memory=self.t_memory, t_collective=self.t_collective,
+                    bottleneck=self.bottleneck,
+                    useful=self.useful_fraction, mfu_bound=self.mfu_bound,
+                    step_time=self.step_time)
+
+
+def model_flops_train(cfg, seq_len: int, global_batch: int) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) + attention flops."""
+    n_active = active_params(cfg)
+    tokens = seq_len * global_batch
+    base = 6.0 * n_active * tokens
+    # causal attention: 6·b·s²·d_attn (qk + av, fwd+bwd) per layer
+    attn = attention_flops(cfg, seq_len, global_batch, train=True)
+    return base + attn
+
+
+def model_flops_decode(cfg, context: int, global_batch: int) -> float:
+    n_active = active_params(cfg)
+    base = 2.0 * n_active * global_batch  # one token, fwd only
+    attn = attention_flops(cfg, context, global_batch, train=False,
+                           decode=True)
+    return base + attn
+
+
+def model_flops_prefill(cfg, seq_len: int, global_batch: int) -> float:
+    n_active = active_params(cfg)
+    tokens = seq_len * global_batch
+    return 2.0 * n_active * tokens + attention_flops(
+        cfg, seq_len, global_batch, train=False)
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: top-k + shared only)."""
+    n = cfg.num_params()
+    if not cfg.moe:
+        return float(n)
+    d = cfg.d_model
+    ff = 3 * d * cfg.moe_d_ff
+    routed_all = cfg.num_experts * ff
+    routed_active = cfg.moe_top_k * ff
+    per_layer_delta = routed_all - routed_active
+    n_moe_layers = cfg.num_layers - cfg.first_k_dense
+    return float(n - n_moe_layers * per_layer_delta)
+
+
+def attention_flops(cfg, seq_len: int, global_batch: int, *,
+                    train: bool, decode: bool = False) -> float:
+    if cfg.family == "ssm":
+        # linear attention: O(s·d·hk) per layer, no quadratic term
+        hk = cfg.rwkv_head_dim
+        per_tok = 4.0 * cfg.d_model * hk * cfg.num_layers
+        toks = global_batch * (1 if decode else seq_len)
+        return (3.0 if train else 1.0) * per_tok * toks
+    hd = cfg.resolved_head_dim if not cfg.mla else (
+        cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    h = cfg.num_heads
+    n_attn_layers = cfg.num_layers
+    if cfg.family == "hybrid":
+        n_attn_layers = cfg.num_layers // 3  # one attn per period
+        window = cfg.local_window
+        if decode:
+            per = 4.0 * h * hd * min(window, seq_len) * global_batch
+        else:
+            per = (4.0 * h * hd * min(window, seq_len)
+                   * seq_len * global_batch / 2)
+        return (3.0 if train else 1.0) * per * n_attn_layers
+    if decode:
+        per = 4.0 * h * hd * seq_len * global_batch
+    else:
+        per = 2.0 * h * hd * seq_len * seq_len * global_batch  # causal ~ /2 *qk+av=4 -> 2
+    return (3.0 if train else 1.0) * per * n_attn_layers
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'cell':42s} {'t_comp(s)':>10s} {'t_mem(s)':>10s} "
+           f"{'t_coll(s)':>10s} {'bound':>10s} {'useful':>7s} "
+           f"{'MFU≤':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['name']:42s} {r['t_compute']:10.4f} {r['t_memory']:10.4f} "
+            f"{r['t_collective']:10.4f} {r['bottleneck']:>10s} "
+            f"{r['useful']:7.3f} {r['mfu_bound']:6.3f}")
+    return "\n".join(lines)

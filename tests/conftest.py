@@ -1,0 +1,24 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — tests must see the 1 real CPU device.
+# Sharded-execution tests spawn subprocesses with their own flags.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_addoption(parser):
+    parser.addoption("--slow", action="store_true", default=False,
+                     help="run slow integration tests")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--slow"):
+        return
+    skip = pytest.mark.skip(reason="slow; use --slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

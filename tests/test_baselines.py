@@ -1,0 +1,92 @@
+"""Paper baselines vs the dense oracle (Table 1/2 methods)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernels_math as km
+from repro.core.exact import ExactGP, chunked_mvm
+from repro.core.sgpr import SGPR, select_inducing
+from repro.core.ski_grid import kiss_gp_operator, kron_matvec
+from repro.core.skip import skip_operator
+
+
+def _xy(rng, n=500, d=3):
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    return x, v
+
+
+def test_chunked_mvm_exact(rng):
+    x, v = _xy(rng)
+    ref = km.dense_mvm(km.MATERN32, x, v)
+    got = chunked_mvm(km.MATERN32, x, v, block=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_kron_matvec(rng):
+    a = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(5, 5)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(20, 2)), jnp.float32)
+    got = kron_matvec([a, b], v)
+    want = jnp.kron(a, b) @ v
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("d", [1, 2, 3])
+def test_kiss_gp_accuracy(rng, d):
+    """Cubic-grid SKI: accurate for small d (the regime it exists for)."""
+    x, v = _xy(rng, n=400, d=d)
+    op = kiss_gp_operator(km.RBF, x, grid_size=40)
+    ref = km.dense_mvm(km.RBF, x, v)
+    rel = float(jnp.linalg.norm(op.mvm(v) - ref) / jnp.linalg.norm(ref))
+    assert rel < 5e-3
+
+
+def test_kiss_grid_grows_exponentially():
+    """Fig 1's point: the KISS grid is g^d while the lattice is ~n(d+1)."""
+    rng = np.random.default_rng(0)
+    x3, _ = _xy(rng, n=100, d=3)
+    op3 = kiss_gp_operator(km.RBF, x3, grid_size=10)
+    assert op3.total == 10 ** 3
+    from repro.core.lattice import build_lattice
+    lat = build_lattice(x3, spacing=1.0, r=1)
+    assert int(lat.m) <= 100 * 4  # n (d+1)
+
+
+def test_skip_rank_limited(rng):
+    """SKIP's low-rank Hadamard approximation degrades vs rank (the
+    paper's criticism); higher rank must do better."""
+    x, v = _xy(rng, n=400, d=4)
+    ref = km.dense_mvm(km.RBF, x, v)
+    errs = []
+    for rank in (8, 32):
+        op = skip_operator(km.RBF, x, grid_size=48, rank=rank)
+        errs.append(float(jnp.linalg.norm(op.mvm(v) - ref)
+                          / jnp.linalg.norm(ref)))
+    assert errs[1] < errs[0]
+    assert errs[1] < 0.2
+
+
+def test_sgpr_bound_and_posterior(rng):
+    x, _ = _xy(rng, n=400, d=3)
+    y = jnp.sin(x[:, 0]) + 0.05 * jnp.asarray(rng.normal(size=400),
+                                              jnp.float32)
+    eg = ExactGP(km.RBF)
+    exact = float(eg.mll(x, y, lengthscale=1.0, outputscale=1.0,
+                         noise=0.05))
+    sg = SGPR(km.RBF, select_inducing(jax.random.PRNGKey(0), x, 200))
+    bound = float(sg.mll(x, y, lengthscale=1.0, outputscale=1.0,
+                         noise=0.05))
+    assert bound <= exact + 1e-3  # ELBO is a lower bound
+    xs = jnp.asarray(rng.normal(size=(50, 3)), jnp.float32)
+    mean, var = sg.posterior(x, y, xs, lengthscale=1.0, outputscale=1.0,
+                             noise=0.05)
+    ref = eg.posterior(x, y, xs, lengthscale=1.0, outputscale=1.0,
+                       noise=0.05)
+    rel = float(jnp.linalg.norm(mean - ref.mean)
+                / jnp.linalg.norm(ref.mean))
+    assert rel < 0.05
+    assert bool(jnp.all(var > 0))

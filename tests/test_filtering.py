@@ -1,0 +1,143 @@
+"""Simplex-GP MVM vs the dense oracle (paper §3.1/§4.2; Fig 4 regime)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import filtering, kernels_math as km
+from repro.core.lattice import build_lattice
+from repro.core.stencil import make_stencil
+
+
+def _data(rng, n, d, c=2):
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    return x, v
+
+
+def cosine_err(a, b):
+    return 1.0 - float(jnp.vdot(a, b)
+                       / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+
+
+@pytest.mark.parametrize("d", [2, 4, 8])
+@pytest.mark.parametrize("kernel", ["rbf", "matern32"])
+def test_forward_matches_dense_oracle(rng, d, kernel):
+    """Fig-4 regime: cosine error 1e-3..1e-1 at r=1.
+
+    RBF is exactly separable across lattice directions, so it stays tight
+    at high d; Matern is not, and its error grows with d (the paper's own
+    Fig 4 spans up to ~1e-1)."""
+    x, v = _data(rng, 500, d)
+    st = make_stencil(kernel, 1)
+    mv, lat = filtering.mvm_operator(x, st)
+    ref = km.dense_mvm(km.get_profile(kernel), x, v)
+    limit = 6e-2 if (kernel == "rbf" or d <= 4) else 2e-1
+    assert cosine_err(mv(v), ref) < limit
+    assert not bool(lat.overflow)
+
+
+def test_order_tradeoff_not_monotone_claim(rng):
+    """Fig 4's observation: higher r does not always reduce the error
+    (blur truncation interacts with spacing) — but errors stay in the
+    same decade."""
+    x, v = _data(rng, 400, 3)
+    errs = []
+    for r in (1, 2, 3):
+        st = make_stencil("rbf", r)
+        mv, _ = filtering.mvm_operator(x, st)
+        errs.append(cosine_err(mv(v), km.dense_mvm(km.RBF, x, v)))
+    assert max(errs) < 10 * min(errs)
+    assert max(errs) < 1e-1
+
+
+def test_symmetrized_operator_is_symmetric(rng):
+    x, _ = _data(rng, 300, 3)
+    st = make_stencil("matern32", 1)
+    mv, _ = filtering.mvm_operator(x, st, symmetrize=True)
+    u = jnp.asarray(np.random.default_rng(1).normal(size=(300, 1)),
+                    jnp.float32)
+    w = jnp.asarray(np.random.default_rng(2).normal(size=(300, 1)),
+                    jnp.float32)
+    lhs = float(jnp.vdot(w, mv(u)))
+    rhs = float(jnp.vdot(u, mv(w)))
+    assert abs(lhs - rhs) < 1e-3 * max(abs(lhs), 1.0)
+
+
+def test_transpose_operator(rng):
+    """filter_mvm_t is the exact adjoint of filter_mvm (unsymmetrized)."""
+    x, _ = _data(rng, 250, 4)
+    st = make_stencil("rbf", 1)
+    lat = build_lattice(x, spacing=st.spacing, r=1)
+    w = jnp.asarray(st.weights, jnp.float32)
+    u = jnp.asarray(np.random.default_rng(3).normal(size=(250, 2)),
+                    jnp.float32)
+    v = jnp.asarray(np.random.default_rng(4).normal(size=(250, 2)),
+                    jnp.float32)
+    fu = filtering.filter_mvm(lat, u, w, symmetrize=False)
+    ftv = filtering.filter_mvm_t(lat, v, w, symmetrize=False)
+    np.testing.assert_allclose(float(jnp.vdot(v, fu)),
+                               float(jnp.vdot(u, ftv)), rtol=1e-4)
+
+
+@pytest.mark.parametrize("kernel,r", [("rbf", 1), ("matern32", 2)])
+def test_custom_vjp_dv_is_transpose(rng, kernel, r):
+    """dL/dv through the custom VJP == F^T g exactly."""
+    x, v = _data(rng, 200, 3)
+    g = jnp.asarray(rng.normal(size=v.shape), jnp.float32)
+    st = make_stencil(kernel, r)
+    spec = filtering.spec_for(st)
+    w = jnp.asarray(st.weights, jnp.float32)
+    dw = jnp.asarray(st.dweights, jnp.float32)
+    _, vjp = jax.vjp(lambda vv: filtering.lattice_filter(x, vv, w, dw,
+                                                         spec), v)
+    (dv,) = vjp(g)
+    lat = build_lattice(x, spacing=st.spacing, r=r)
+    want = filtering.filter_mvm_t(lat, g, w, symmetrize=spec.symmetrize)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "matern32"])
+def test_paper_gradient_direction(rng, kernel):
+    """§4.2 input-space gradient aligns with the dense-oracle gradient."""
+    n, d, c = 300, 3, 2
+    x, v = _data(rng, n, d, c)
+    g = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    st = make_stencil(kernel, 2)
+    spec = filtering.spec_for(st)
+    w = jnp.asarray(st.weights, jnp.float32)
+    dw = jnp.asarray(st.dweights, jnp.float32)
+    dz = jax.grad(lambda z: jnp.vdot(
+        g, filtering.lattice_filter(z, v, w, dw, spec)))(x)
+    dz_ref = km.dense_grad_x(km.get_profile(kernel), x, v, g)
+    cos = float(jnp.vdot(dz, dz_ref)
+                / (jnp.linalg.norm(dz) * jnp.linalg.norm(dz_ref)))
+    assert cos > 0.9
+
+
+def test_autodiff_through_barycentric_weights(rng):
+    """Beyond-paper grad mode: autodiff through the lattice operator runs
+    and produces finite, nonzero gradients."""
+    x, v = _data(rng, 200, 3)
+    st = make_stencil("rbf", 1)
+    w = jnp.asarray(st.weights, jnp.float32)
+
+    def f(z):
+        lat = build_lattice(z, spacing=st.spacing, r=1)
+        return jnp.sum(filtering.filter_mvm(lat, v, w) ** 2)
+
+    dz = jax.grad(f)(x)
+    assert bool(jnp.all(jnp.isfinite(dz)))
+    assert float(jnp.linalg.norm(dz)) > 0
+
+
+def test_pallas_blur_path_matches_default(rng):
+    x, v = _data(rng, 200, 3)
+    st = make_stencil("rbf", 1)
+    lat = build_lattice(x, spacing=st.spacing, r=1)
+    w = jnp.asarray(st.weights, jnp.float32)
+    a = filtering.filter_mvm(lat, v, w, use_pallas=False)
+    b = filtering.filter_mvm(lat, v, w, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)

@@ -1,0 +1,94 @@
+"""End-to-end Simplex-GP inference tests (paper §5 behaviours)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernels_math as km
+from repro.core.exact import ExactGP
+from repro.gp import (GPParams, SimplexGP, SimplexGPConfig, cross_mvm, fit,
+                      mll_value_and_grad, nll, posterior, rmse)
+from repro.gp.models import softplus
+
+
+def _problem(rng, n=600, d=3, noise=0.1):
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    f = jnp.sin(2 * x[:, 0]) + 0.5 * jnp.cos(x[:, 1] * (x[:, 2]
+                                                        if d > 2 else 1.0))
+    y = f + noise * jnp.asarray(rng.normal(size=n), jnp.float32)
+    return x, y, f
+
+
+def test_mll_value_close_to_exact(rng):
+    x, y, _ = _problem(rng, n=500)
+    model = SimplexGP(SimplexGPConfig(kernel="matern32", max_cg_iters=80,
+                                      num_probes=10, max_lanczos_iters=40))
+    params = GPParams.init(3, noise=0.2)
+    res = mll_value_and_grad(model, params, x, y, jax.random.PRNGKey(0),
+                             tol=1e-3)
+    eg = ExactGP(km.MATERN32)
+    ls, os_, nz = model.constrained(params)
+    want = float(eg.mll(x, y, lengthscale=ls, outputscale=os_, noise=nz))
+    # lattice operator approximates K; SLQ adds noise — same decade check
+    assert abs(float(res.mll) - want) < 0.45 * abs(want) + 50.0
+
+
+@pytest.mark.parametrize("grad_mode", ["paper", "autodiff"])
+def test_training_improves_validation_rmse(rng, grad_mode):
+    x, y, _ = _problem(rng, n=700)
+    xv, yv, fv = _problem(np.random.default_rng(7), n=150)
+    model = SimplexGP(SimplexGPConfig(kernel="matern32", max_cg_iters=40,
+                                      num_probes=6, grad_mode=grad_mode,
+                                      max_lanczos_iters=20))
+    res = fit(model, x, y, x_val=xv, y_val=fv, epochs=10, lr=0.1,
+              patience=10)
+    first = res.history[0]["val_rmse"]
+    assert res.best_val_rmse < first  # learning happened
+
+
+def test_posterior_beats_prior(rng):
+    x, y, _ = _problem(rng, n=600)
+    xs, ys, fs = _problem(np.random.default_rng(3), n=120)
+    model = SimplexGP(SimplexGPConfig(kernel="matern32", max_cg_iters=60))
+    params = GPParams.init(3, noise=0.1, lengthscale=1.0)
+    post = posterior(model, params, x, y, xs, key=jax.random.PRNGKey(1))
+    pr = float(rmse(post, fs))
+    assert pr < float(jnp.std(fs))  # better than predicting the mean
+    assert bool(jnp.all(post.var > 0))
+    assert np.isfinite(float(nll(post, model.constrained(params)[2], fs)))
+
+
+def test_cross_mvm_matches_dense(rng):
+    x = jnp.asarray(rng.normal(size=(300, 3)), jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(80, 3)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(300, 2)), jnp.float32)
+    model = SimplexGP(SimplexGPConfig(kernel="rbf"))
+    params = GPParams.init(3)
+    got = cross_mvm(model, params, x, xs, v)
+    ls, os_, _ = model.constrained(params)
+    want = km.gram(km.RBF, xs, x, ls, os_) @ v
+    cos = float(jnp.vdot(got, want)
+                / (jnp.linalg.norm(got) * jnp.linalg.norm(want)))
+    assert cos > 0.93
+
+
+def test_rrcg_training_step_runs(rng):
+    x, y, _ = _problem(rng, n=300)
+    model = SimplexGP(SimplexGPConfig(kernel="rbf", max_cg_iters=40,
+                                      num_probes=4, max_lanczos_iters=15))
+    params = GPParams.init(3)
+    res = mll_value_and_grad(model, params, x, y, jax.random.PRNGKey(5),
+                             use_rrcg=True)
+    assert np.isfinite(float(res.mll))
+    for leaf in jax.tree.leaves(res.grads):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_precond_rank_config(rng):
+    x, y, _ = _problem(rng, n=250)
+    model = SimplexGP(SimplexGPConfig(kernel="matern32", max_cg_iters=30,
+                                      precond_rank=20, num_probes=4,
+                                      max_lanczos_iters=10))
+    params = GPParams.init(3)
+    res = mll_value_and_grad(model, params, x, y, jax.random.PRNGKey(0))
+    assert np.isfinite(float(res.mll))

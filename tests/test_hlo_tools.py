@@ -1,0 +1,62 @@
+"""HLO analysis tools: collective parsing + trip-count-aware costs."""
+import os
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.utils import hlo, hlo_cost
+
+
+def test_shape_bytes():
+    assert hlo.shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert hlo.shape_bytes("bf16[2,2]{1,0}") == 8
+    assert hlo.shape_bytes("(f32[2], s32[3])") == 8 + 12
+    assert hlo.shape_bytes("pred[]") == 1
+
+
+def test_collective_stats_parsing():
+    text = """
+HloModule m
+ENTRY %main {
+  %p = f32[64,64] parameter(0)
+  %ag = f32[64,256] all-gather(%p), dimensions={1}
+  %ar = f32[64,64] all-reduce(%p), to_apply=%add
+  %rs = f32[16,64] reduce-scatter(%p), dimensions={0}
+}
+"""
+    st = hlo.collective_stats(text)
+    assert st.by_kind["all-gather"][0] == 1
+    assert st.by_kind["all-gather"][1] == 64 * 256 * 4
+    assert st.total_bytes == (64 * 256 + 64 * 64 + 16 * 64) * 4
+
+
+def test_trip_count_scaling_on_scan():
+    """The analyzer multiplies scanned-body flops by the trip count."""
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        out, _ = jax.lax.scan(body, x, w)
+        return out.sum()
+
+    xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((24, 64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(xs, ws).compile()
+    cost = hlo_cost.analyze(compiled.as_text())
+    # 24 iterations x 2*64^3 flops
+    want = 24 * 2 * 64 ** 3
+    assert 0.8 * want <= cost.flops <= 1.5 * want
+    assert any(v == 24 for v in cost.trip_counts.values())
+
+
+def test_dot_flops_vs_xla_costs_nonloop():
+    """Without loops our dot counting matches XLA's cost analysis."""
+    def f(a, b):
+        return (a @ b).sum()
+
+    aa = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    bb = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    compiled = jax.jit(f).lower(aa, bb).compile()
+    cost = hlo_cost.analyze(compiled.as_text())
+    ca = compiled.cost_analysis()
+    assert abs(cost.flops - float(ca["flops"])) < 0.2 * float(ca["flops"])

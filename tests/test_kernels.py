@@ -1,0 +1,123 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernels_math as km
+from repro.core import lattice as L
+from repro.core.stencil import make_stencil
+from repro.kernels.blur.ops import blur_pallas
+from repro.kernels.blur.ref import blur_ref
+from repro.kernels.exact_mvm.ops import exact_mvm
+from repro.kernels.exact_mvm.ref import exact_mvm_ref
+from repro.kernels.flash_attention.ops import (blockwise_attention_xla,
+                                               flash_attention)
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# ---------------------------------------------------------------------------
+# exact_mvm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,c", [(64, 2, 1), (300, 5, 2), (512, 3, 1),
+                                   (777, 11, 4)])
+@pytest.mark.parametrize("profile", ["rbf", "matern32", "matern52"])
+def test_exact_mvm_sweep(rng, n, d, c, profile):
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    got = exact_mvm(profile, x, v)
+    want = exact_mvm_ref(km.get_profile(profile), x, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_exact_mvm_outputscale(rng):
+    x = jnp.asarray(rng.normal(size=(128, 3)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(128, 1)), jnp.float32)
+    got = exact_mvm("rbf", x, v, outputscale=2.5)
+    want = 2.5 * exact_mvm_ref(km.RBF, x, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# blur
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,r,c", [(1, 1, 1), (2, 1, 1), (4, 2, 3),
+                                   (7, 1, 2), (3, 3, 5)])
+def test_blur_sweep(rng, d, r, c):
+    x = jnp.asarray(rng.normal(size=(256, d)), jnp.float32)
+    st = make_stencil("rbf", r=r)
+    lat = L.build_lattice(x, spacing=st.spacing, r=r)
+    vals = jnp.asarray(rng.normal(size=(lat.cap + 1, c)),
+                       jnp.float32).at[lat.cap].set(0.0)
+    w = jnp.asarray(st.weights, jnp.float32)
+    for rev in (False, True):
+        got = blur_pallas(lat, vals, tuple(st.weights), reverse=rev)
+        want = blur_ref(vals, lat.nbr, w, reverse=rev)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    (1, 4, 4, 256, 256, 64, True),   # MHA causal
+    (2, 8, 2, 256, 256, 64, True),   # GQA group 4
+    (1, 6, 6, 128, 384, 32, True),   # decode offset
+    (2, 4, 1, 256, 256, 64, False),  # MQA, bidirectional
+    (1, 2, 2, 100, 300, 48, True),   # ragged shapes
+    (1, 4, 2, 1, 333, 64, True),     # single-token decode
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,hd,causal", CASES)
+def test_flash_pallas_sweep(rng, b, hq, hkv, sq, sk, hd, causal):
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, use_pallas=True)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,hd,causal", CASES[:4])
+def test_blockwise_xla_sweep(rng, b, hq, hkv, sq, sk, hd, causal):
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, hd)), jnp.float32)
+    got = blockwise_attention_xla(q, k, v, causal=causal, block_q=64,
+                                  block_k=128)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_blockwise_mla_vdim(rng):
+    """MLA: v head dim differs from qk head dim."""
+    q = jnp.asarray(rng.normal(size=(2, 4, 128, 48)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 4, 128, 48)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 4, 128, 32)), jnp.float32)
+    got = blockwise_attention_xla(q, k, v, causal=True, block_q=64,
+                                  block_k=64)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, use_pallas=True)
+    want = attention_ref(q, k, v, causal=True)
+    rel = float(jnp.linalg.norm((got - want).astype(jnp.float32))
+                / jnp.linalg.norm(want.astype(jnp.float32)))
+    assert rel < 2e-2

@@ -1,0 +1,96 @@
+"""MoE dispatch correctness: routing, capacity, EP data path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="moe", num_layers=1, d_model=32,
+                num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=128,
+                moe=True, num_experts=8, moe_top_k=2, moe_d_ff=16,
+                capacity_factor=8.0, dtype=jnp.float32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _dense_reference(params, x, cfg):
+    """Loop-based oracle: every token through its top-k experts."""
+    b, s, d = x.shape
+    logits = x.reshape(-1, d) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.moe_top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    xf = x.reshape(-1, d)
+    out = np.zeros((b * s, d), np.float32)
+    for t in range(b * s):
+        for j in range(cfg.moe_top_k):
+            e = int(top_e[t, j])
+            h = jax.nn.silu(xf[t] @ params["wi_gate"][e]) * (
+                xf[t] @ params["wi_up"][e])
+            out[t] += float(top_p[t, j]) * np.asarray(h @ params["wo"][e])
+    return out.reshape(b, s, d)
+
+
+def test_moe_matches_dense_reference(rng):
+    cfg = _cfg()
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 12, 32)), jnp.float32)
+    got = moe_mod.moe_apply(params, x, cfg)
+    want = _dense_reference(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got.y), want, rtol=1e-4,
+                               atol=1e-4)
+    assert float(got.aux_loss) > 0
+
+
+def test_capacity_drops_overflow(rng):
+    """With capacity_factor ~0, (almost) everything drops -> y ~ 0
+    (shared experts disabled)."""
+    cfg = _cfg(capacity_factor=1e-6)
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, 64, 32)), jnp.float32)
+    got = moe_mod.moe_apply(params, x, cfg)
+    full = moe_mod.moe_apply(
+        params, x, _cfg(capacity_factor=8.0))
+    assert float(jnp.linalg.norm(got.y)) < float(jnp.linalg.norm(full.y))
+
+
+def test_shared_experts_added(rng):
+    cfg = _cfg(num_shared_experts=1)
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, 8, 32)), jnp.float32)
+    got = moe_mod.moe_apply(params, x, cfg)
+    # removing the shared contribution recovers the routed-only output
+    routed = moe_mod.moe_apply({k: v for k, v in params.items()
+                                if k != "shared"},
+                               x, _cfg(num_shared_experts=0))
+    from repro.models import modules as nn
+    shared = nn.mlp_apply(params["shared"], x.reshape(-1, 32),
+                          "swiglu").reshape(1, 8, 32)
+    np.testing.assert_allclose(np.asarray(got.y),
+                               np.asarray(routed.y + shared), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_aux_loss_prefers_balance(rng):
+    """Uniform routing yields smaller aux loss than collapsed routing."""
+    cfg = _cfg(router_aux_coef=1.0)
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, 64, 32)), jnp.float32)
+    balanced = moe_mod.moe_apply(params, x, cfg)
+    # collapse the router onto one expert
+    collapsed = dict(params)
+    collapsed["router"] = params["router"].at[:, 0].add(100.0)
+    worse = moe_mod.moe_apply(collapsed, x, cfg)
+    assert float(worse.aux_loss) > float(balanced.aux_loss)
+
+
+def test_capacity_alignment():
+    cfg = _cfg()
+    c = moe_mod.capacity(cfg, 4096)
+    assert c % 8 == 0 and c >= 8

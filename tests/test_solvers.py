@@ -1,0 +1,120 @@
+"""Krylov solver tests: CG, preconditioning, SLQ, RR-CG."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kernels_math as km
+from repro.solvers import (cg, expected_iters, lanczos, pivoted_cholesky,
+                           precond_logdet, rrcg, slq_logdet,
+                           woodbury_precond)
+
+
+def _spd(rng, n, cond=100.0):
+    a = rng.normal(size=(n, n))
+    m = a @ a.T / n + np.eye(n) / cond
+    return jnp.asarray(m, jnp.float32)
+
+
+def test_cg_solves_to_tolerance(rng):
+    a = _spd(rng, 200)
+    b = jnp.asarray(rng.normal(size=(200, 3)), jnp.float32)
+    x, info = cg(lambda v: a @ v, b, tol=1e-6, max_iters=300)
+    rel = float(jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b))
+    assert rel < 1e-5
+    assert bool(info.converged.all())
+
+
+def test_cg_min_iters_at_paper_tolerance(rng):
+    """Appendix A train tolerance 1.0 must still do work (>= min_iters)."""
+    a = _spd(rng, 150)
+    b = jnp.asarray(rng.normal(size=(150, 1)), jnp.float32)
+    x, info = cg(lambda v: a @ v, b, tol=1.0, max_iters=100, min_iters=10)
+    assert int(info.iterations) >= 10
+    assert float(jnp.linalg.norm(x)) > 0
+
+
+def test_preconditioner_reduces_iterations(rng):
+    x0 = jnp.asarray(rng.normal(size=(400, 4)), jnp.float32)
+    k = km.gram(km.RBF, x0, x0)
+    s2 = jnp.float32(0.05)
+    mv = lambda v: k @ v + s2 * v
+    b = jnp.asarray(rng.normal(size=(400, 1)), jnp.float32)
+    pc = pivoted_cholesky(lambda i: km.gram(km.RBF, x0[i][None], x0)[0],
+                          jnp.ones(400, jnp.float32), 40)
+    pre = woodbury_precond(pc.l, s2)
+    _, plain = cg(mv, b, tol=1e-4, max_iters=300)
+    _, prec = cg(mv, b, precond=pre, tol=1e-4, max_iters=300)
+    assert int(prec.iterations) < int(plain.iterations)
+
+
+def test_pivoted_cholesky_approximates_kernel(rng):
+    x0 = jnp.asarray(rng.normal(size=(200, 3)), jnp.float32)
+    k = km.gram(km.RBF, x0, x0)
+    pc = pivoted_cholesky(lambda i: k[i], jnp.ones(200, jnp.float32), 60)
+    approx = pc.l @ pc.l.T
+    rel = float(jnp.linalg.norm(approx - k) / jnp.linalg.norm(k))
+    assert rel < 0.1
+    assert float(pc.error) >= 0
+
+
+def test_woodbury_matches_direct(rng):
+    l = jnp.asarray(rng.normal(size=(100, 10)), jnp.float32)
+    s2 = jnp.float32(0.3)
+    p = l @ l.T + s2 * jnp.eye(100)
+    b = jnp.asarray(rng.normal(size=(100, 2)), jnp.float32)
+    got = woodbury_precond(l, s2)(b)
+    want = jnp.linalg.solve(p, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-4)
+    ld = float(precond_logdet(l, s2, 100))
+    want_ld = float(jnp.linalg.slogdet(p)[1])
+    assert abs(ld - want_ld) < 1e-2 * abs(want_ld)
+
+
+def test_slq_logdet(rng):
+    a = _spd(rng, 250)
+    ld = slq_logdet(lambda v: a @ v, 250, key=jax.random.PRNGKey(0),
+                    num_probes=30, num_iters=60)
+    want = float(jnp.linalg.slogdet(a)[1])
+    assert abs(float(ld) - want) < 0.1 * abs(want)
+
+
+def test_lanczos_extreme_eigenvalues(rng):
+    a = _spd(rng, 150)
+    evals = np.linalg.eigvalsh(np.asarray(a))
+    q0 = jnp.asarray(rng.normal(size=(150, 1)), jnp.float32)
+    res = lanczos(lambda v: a @ v, q0, 50)
+    t = (np.diag(np.asarray(res.alphas[:, 0]))
+         + np.diag(np.asarray(res.betas[:-1, 0]), 1)
+         + np.diag(np.asarray(res.betas[:-1, 0]), -1))
+    ritz = np.linalg.eigvalsh(t)
+    assert abs(ritz.max() - evals.max()) < 1e-2 * evals.max()
+
+
+def test_rrcg_unbiased(rng):
+    a = _spd(rng, 120)
+    b = jnp.asarray(rng.normal(size=(120, 1)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(2), 48)
+    sols = jnp.stack([rrcg(lambda v: a @ v, b, key=k, min_iters=20,
+                           max_iters=120).x for k in keys])
+    mean = jnp.mean(sols, axis=0)
+    want = jnp.linalg.solve(a, b)
+    rel = float(jnp.linalg.norm(mean - want) / jnp.linalg.norm(want))
+    assert rel < 0.05
+
+
+def test_rrcg_expected_iters_between_bounds():
+    e = expected_iters(20, 200, q=0.95)
+    assert 20 < e < 60  # ~ min + 1/(1-q)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 120), seed=st.integers(0, 999))
+def test_property_cg_residual_decreases(n, seed):
+    rng = np.random.default_rng(seed)
+    a = _spd(rng, n)
+    b = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+    x, info = cg(lambda v: a @ v, b, tol=1e-5, max_iters=2 * n)
+    assert float(info.residual_norms[0]) < 1e-3
