@@ -1,10 +1,17 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV emission + JSON artifacts."""
 from __future__ import annotations
 
+import json
 import os
+import pathlib
 import time
 
 import jax
+
+# machine-readable benchmark artifacts land next to the repo root so the
+# perf trajectory can be tracked across PRs (BENCH_*.json)
+ARTIFACT_DIR = pathlib.Path(os.environ.get(
+    "BENCH_ARTIFACT_DIR", pathlib.Path(__file__).resolve().parents[1]))
 
 # default subsample so `python -m benchmarks.run` finishes on 1 CPU core;
 # crank BENCH_SCALE up for larger runs.
@@ -27,3 +34,20 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 def emit(name: str, seconds: float | None, derived: str):
     us = f"{seconds * 1e6:.1f}" if seconds is not None else ""
     print(f"{name},{us},{derived}")
+
+
+def write_json(name: str, payload: dict) -> pathlib.Path:
+    """Write a BENCH_*.json artifact (adds host metadata)."""
+    out = dict(payload)
+    out.setdefault("host", {})
+    out["host"].update({
+        "jax_backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "device_count": jax.device_count(),
+        "bench_scale": SCALE,
+    })
+    path = ARTIFACT_DIR / name
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path}")
+    return path

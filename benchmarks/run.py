@@ -37,6 +37,11 @@ def main() -> None:
         except Exception as e:  # keep the suite going
             traceback.print_exc()
             print(f"{key}/TOTAL,,ERROR {e}")
+    # machine-readable artifacts written by the modules (BENCH_*.json)
+    from benchmarks.common import ARTIFACT_DIR
+    arts = sorted(p.name for p in ARTIFACT_DIR.glob("BENCH_*.json"))
+    if arts:
+        print(f"# artifacts in {ARTIFACT_DIR}: {', '.join(arts)}")
 
 
 if __name__ == "__main__":

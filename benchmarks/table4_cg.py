@@ -41,9 +41,12 @@ def main():
                 ("cg_1e-2", 30, 1e-2, False),
                 ("cg_1e-4", 150, 1e-4, False),
                 ("rrcg", 150, 1e-8, True)]:
+            # "auto" resolves to the fused lattice-MVM backend for this
+            # host (kernels/blur/ops.py policy) — every CG iteration of the
+            # step rides the fused path.
             model = SimplexGP(SimplexGPConfig(
                 kernel="matern32", max_cg_iters=iters, num_probes=4,
-                max_lanczos_iters=10))
+                max_lanczos_iters=10, backend="auto"))
             s = one_step_seconds(model, params, x, y, tol=tol,
                                  use_rrcg=rr)
             eff = (expected_iters(iters // 4, iters)

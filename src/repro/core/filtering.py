@@ -37,54 +37,62 @@ Array = jax.Array
 
 
 class FilterSpec(NamedTuple):
-    """Static configuration of a lattice filter (hashable; jit-friendly)."""
+    """Static configuration of a lattice filter (hashable; jit-friendly).
+
+    ``taps``/``dtaps`` carry the CONCRETE stencil values so Pallas/fused
+    backends can bake them into the kernel even when the ``weights`` array
+    reaching ``filter_mvm`` is traced under jit (converting a tracer with
+    ``float()`` crashes — the seed's ``use_pallas`` bug).
+    """
 
     spacing: float
     r: int
     cap: int | None
     symmetrize: bool
     dscale: float = 1.0  # amplitude of the derivative kernel k'(0)
+    taps: tuple[float, ...] | None = None  # concrete forward stencil
+    dtaps: tuple[float, ...] | None = None  # concrete derivative stencil
+    backend: str = "auto"  # kernels/blur/ops.py backend policy
 
 
 def spec_for(stencil: Stencil, cap: int | None = None,
-             symmetrize: bool = True) -> FilterSpec:
+             symmetrize: bool = True, backend: str = "auto") -> FilterSpec:
     return FilterSpec(spacing=stencil.spacing, r=stencil.r, cap=cap,
-                      symmetrize=symmetrize, dscale=stencil.dscale)
+                      symmetrize=symmetrize, dscale=stencil.dscale,
+                      taps=tuple(stencil.weights),
+                      dtaps=tuple(stencil.dweights), backend=backend)
 
 
-def filter_mvm(lat: Lattice, v: Array, weights: Array, *,
-               symmetrize: bool = True, use_pallas: bool = False) -> Array:
+def filter_mvm(lat: Lattice, v: Array, weights: Array | None = None, *,
+               symmetrize: bool = True, backend: str = "auto",
+               taps: tuple[float, ...] | None = None,
+               use_pallas: bool = False) -> Array:
     """Apply the lattice operator W B W^T to (n, c) values, lattice given.
 
     This is the fast path for CG loops: build the lattice once per
-    hyperparameter setting, then call this per iteration.
-    ``use_pallas`` routes the blur through the Pallas kernel
-    (kernels/blur) — requires a concrete (non-traced) stencil.
+    hyperparameter setting, then call this per iteration. ``backend``
+    selects the kernels/blur/ops.py tier ("auto" = policy choice);
+    ``use_pallas`` is the seed-compatible alias for the per-direction tier.
+    Concrete ``taps`` enable the Pallas/fused tiers under jit.
     """
-    splatted = lat_mod.splat(lat, v)
+    from repro.kernels.blur.ops import lattice_mvm
     if use_pallas:
-        from repro.kernels.blur.ops import blur_pallas
-        taps = tuple(float(w) for w in weights)
-        blurred = blur_pallas(lat, splatted, taps, reverse=False)
-        if symmetrize:
-            blurred_r = blur_pallas(lat, splatted, taps, reverse=True)
-            blurred = 0.5 * (blurred + blurred_r)
-        return lat_mod.slice_(lat, blurred)
-    blurred = lat_mod.blur(lat, splatted, weights, reverse=False)
-    if symmetrize:
-        blurred_r = lat_mod.blur(lat, splatted, weights, reverse=True)
-        blurred = 0.5 * (blurred + blurred_r)
-    return lat_mod.slice_(lat, blurred)
+        backend = "per_direction_pallas"
+    return lattice_mvm(lat, v, weights, taps=taps, symmetrize=symmetrize,
+                       backend=backend)
 
 
-def filter_mvm_t(lat: Lattice, v: Array, weights: Array, *,
-                 symmetrize: bool = True) -> Array:
-    """Transpose operator F^T (== F when symmetrized)."""
-    if symmetrize:
-        return filter_mvm(lat, v, weights, symmetrize=True)
-    splatted = lat_mod.splat(lat, v)
-    blurred = lat_mod.blur(lat, splatted, weights, reverse=True)
-    return lat_mod.slice_(lat, blurred)
+def filter_mvm_t(lat: Lattice, v: Array, weights: Array | None = None, *,
+                 symmetrize: bool = True, backend: str = "auto",
+                 taps: tuple[float, ...] | None = None) -> Array:
+    """Transpose operator F^T (== F when symmetrized).
+
+    The fused backends give the transpose for free: it is the same kernel
+    with the sweep order flipped.
+    """
+    from repro.kernels.blur.ops import lattice_mvm
+    return lattice_mvm(lat, v, weights, taps=taps, symmetrize=symmetrize,
+                       transpose=True, backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -106,13 +114,15 @@ def lattice_filter(z: Array, v: Array, weights: Array, dweights: Array,
     """
     lat = lat_mod.build_lattice(z, spacing=spec.spacing, r=spec.r,
                                 cap=spec.cap)
-    return filter_mvm(lat, v, weights, symmetrize=spec.symmetrize)
+    return filter_mvm(lat, v, weights, symmetrize=spec.symmetrize,
+                      backend=spec.backend, taps=spec.taps)
 
 
 def _filter_fwd(z, v, weights, dweights, spec):
     lat = lat_mod.build_lattice(z, spacing=spec.spacing, r=spec.r,
                                 cap=spec.cap)
-    u = filter_mvm(lat, v, weights, symmetrize=spec.symmetrize)
+    u = filter_mvm(lat, v, weights, symmetrize=spec.symmetrize,
+                   backend=spec.backend, taps=spec.taps)
     return u, (z, v, weights, dweights, lat)
 
 
@@ -121,15 +131,18 @@ def _filter_bwd(spec, res, g):
     n, d = z.shape
     c = v.shape[1]
 
-    # dL/dv = F^T g — reuse the already-built lattice.
-    dv = filter_mvm_t(lat, g, weights, symmetrize=spec.symmetrize)
+    # dL/dv = F^T g — reuse the already-built lattice; the fused backends
+    # run the transpose as the same kernel with the sweep order flipped.
+    dv = filter_mvm_t(lat, g, weights, symmetrize=spec.symmetrize,
+                      backend=spec.backend, taps=spec.taps)
 
     # dL/dz via Eq. 12/13: one filter call with the k' stencil on
     # Concat([z ⊙ g, g, z ⊙ v, v]) (signs folded into the combination).
     zg = (z[:, :, None] * g[:, None, :]).reshape(n, d * c)
     zv = (z[:, :, None] * v[:, None, :]).reshape(n, d * c)
     big = jnp.concatenate([zg, g, zv, v], axis=1)
-    out = filter_mvm(lat, big, dweights, symmetrize=spec.symmetrize)
+    out = filter_mvm(lat, big, dweights, symmetrize=spec.symmetrize,
+                     backend=spec.backend, taps=spec.dtaps)
     A = out[:, : d * c].reshape(n, d, c)  # F'(z ⊙ g)
     B = out[:, d * c: d * c + c]  # F' g
     C = out[:, d * c + c: 2 * d * c + c].reshape(n, d, c)  # F'(z ⊙ v)
@@ -153,17 +166,27 @@ lattice_filter.defvjp(_filter_fwd, _filter_bwd)
 
 
 def mvm_operator(z: Array, stencil: Stencil, *, cap: int | None = None,
-                 symmetrize: bool = True):
+                 symmetrize: bool = True, backend: str = "auto",
+                 auto_cap: bool = False):
     """Build the lattice once and return (matvec, lattice).
 
     ``matvec`` maps (n, c) -> (n, c); it is NOT differentiable w.r.t.
     hyperparameters (use ``lattice_filter`` for the surrogate-loss terms).
+    ``auto_cap`` right-sizes the table with grow-and-retry (syncs on the
+    overflow flag, so only valid outside jit) — a much smaller table is
+    what keeps the fused backend's VMEM plan viable at real scales.
     """
-    lat = lat_mod.build_lattice(z, spacing=stencil.spacing, r=stencil.r,
-                                cap=cap)
+    if auto_cap and cap is None:
+        lat = lat_mod.build_lattice_auto(z, spacing=stencil.spacing,
+                                         r=stencil.r)
+    else:
+        lat = lat_mod.build_lattice(z, spacing=stencil.spacing, r=stencil.r,
+                                    cap=cap)
     w = jnp.asarray(stencil.weights, dtype=z.dtype)
+    taps = tuple(stencil.weights)
 
     def matvec(v: Array) -> Array:
-        return filter_mvm(lat, v, w, symmetrize=symmetrize)
+        return filter_mvm(lat, v, w, symmetrize=symmetrize, backend=backend,
+                          taps=taps)
 
     return matvec, lat

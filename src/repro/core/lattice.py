@@ -140,6 +140,14 @@ class Lattice:
     weights: Array  # (n, d+1) f32 barycentric
     nbr: Array  # (d+1, cap+1, 2r) int32 in [0, cap]: blur gather table
     overflow: Array  # () bool: m > cap (results invalid; grow cap and retry)
+    # --- sorted splat plan (DESIGN.md §8): the dedup sort already places all
+    # (input, vertex) contributions of one lattice point contiguously; these
+    # four arrays let splat run as gather + segmented prefix scan + gather,
+    # with no scatter/atomics — the hot-path trick of the fused MVM kernel.
+    sort_row: Array  # (n*(d+1),) int32: input row of the k-th sorted contribution
+    sort_w: Array  # (n*(d+1),) f32: its barycentric weight
+    seg_head: Array  # (n*(d+1),) bool: True at the first member of each slot
+    row_last: Array  # (cap+1,) int32: sorted index of each slot's last member
     d: int = dataclasses.field(metadata=dict(static=True))
     r: int = dataclasses.field(metadata=dict(static=True))
     cap: int = dataclasses.field(metadata=dict(static=True))
@@ -188,6 +196,44 @@ def default_capacity(n: int, d: int) -> int:
     return n * (d + 1)
 
 
+def suggest_capacity(n: int, d: int, spacing: float) -> int:
+    """Heuristic starting capacity for grow-and-retry builds.
+
+    The worst case m = n (d+1) is wildly pessimistic for real data (paper
+    Table 3: m/L between 0.02 and 0.4), and every per-lattice-point array —
+    the neighbor table above all — scales with cap, so over-allocating is
+    the dominant build cost AND what keeps the fused kernel's table out of
+    VMEM. Start from a constant-occupancy guess (wider stencil spacing means
+    coarser cells, hence fewer of them), round up to a power of two, and let
+    ``build_lattice_auto`` grow on overflow.
+    """
+    guess = max(1024, int(n * (d + 1) / (8.0 * max(spacing, 0.25))))
+    # round up to a power of two, but never past the provable worst case
+    return min(1 << (guess - 1).bit_length(), default_capacity(n, d))
+
+
+def build_lattice_auto(z: Array, *, spacing: float, r: int = 1,
+                       cap: int | None = None, growth: int = 4,
+                       max_tries: int = 6) -> "Lattice":
+    """Grow-and-retry wrapper: start at ``suggest_capacity`` and multiply by
+    ``growth`` until the table fits (overflow flag clear).
+
+    Syncs on the overflow flag, so call it OUTSIDE jit (amortized: once per
+    hyperparameter setting). Inside jit, use ``build_lattice`` with a static
+    cap as before.
+    """
+    n, d = z.shape
+    worst = default_capacity(n, d)
+    if cap is None:
+        cap = suggest_capacity(n, d, spacing)
+    for _ in range(max_tries):
+        lat = build_lattice(z, spacing=spacing, r=r, cap=min(cap, worst))
+        if not bool(lat.overflow) or cap >= worst:
+            return lat
+        cap *= growth
+    return lat  # pragma: no cover - max_tries exhausts only past worst case
+
+
 @functools.partial(jax.jit, static_argnames=("r", "cap"))
 def build_lattice(z: Array, *, spacing: float, r: int = 1,
                   cap: int | None = None) -> Lattice:
@@ -233,12 +279,22 @@ def build_lattice(z: Array, *, spacing: float, r: int = 1,
     # per-(input, vertex) slot ids, back in original order
     seg_ids = jnp.zeros((big,), jnp.int32).at[perm].set(slot_sorted)
 
+    # ---- sorted splat plan (DESIGN.md §8) ----------------------------------
+    # Contributions in sorted order: original flat index f = i*(d+1) + k, so
+    # the input row is f // (d+1); segment boundaries are the dedup groups;
+    # the last member per slot indexes the segmented prefix scan's result.
+    sort_row = perm // (d + 1)
+    sort_w = weights.reshape(big)[perm]
+    idx = jnp.arange(big, dtype=jnp.int32)
+    row_last = jnp.zeros((cap + 1,), jnp.int32).at[slot_sorted].max(idx)
+
     # ---- blur neighbor table via merge-sort lookup -------------------------
     nbr = _neighbor_table(coords, valid, d=d, r=r, cap=cap)
 
     return Lattice(coords=coords, valid=valid, m=m, seg_ids=seg_ids,
                    weights=weights, nbr=nbr, overflow=overflow,
-                   d=d, r=r, cap=cap, n=n)
+                   sort_row=sort_row, sort_w=sort_w, seg_head=new_group,
+                   row_last=row_last, d=d, r=r, cap=cap, n=n)
 
 
 def _neighbor_table(coords: Array, valid: Array, *, d: int, r: int,
@@ -317,6 +373,31 @@ def splat(lat: Lattice, v: Array) -> Array:
     contrib = (lat.weights[:, :, None] * v[:, None, :]).reshape(
         n * (lat.d + 1), c)
     out = jax.ops.segment_sum(contrib, lat.seg_ids, num_segments=lat.cap + 1)
+    return out.at[lat.cap].set(0.0)
+
+
+def splat_sorted(lat: Lattice, v: Array) -> Array:
+    """W^T v without any scatter: the fused-backend splat (DESIGN.md §8).
+
+    Uses the build-time sorted plan: gather each sorted contribution's input
+    row, run a segmented inclusive prefix scan (log-depth, pure vector ops —
+    the XLA analogue of the fused Pallas kernel's in-VMEM Hillis-Steele
+    sweep), and read each slot's total at its last member. Equivalent to
+    ``splat`` as a linear map; summation order differs, so results agree to
+    f32 accumulation noise only.
+    """
+    c = v.shape[1]
+    contrib = lat.sort_w[:, None] * jnp.take(v, lat.sort_row, axis=0)
+    carry = jnp.where(lat.seg_head, 0.0, 1.0)[:, None].astype(v.dtype)
+
+    def comb(a, b):
+        g1, v1 = a
+        g2, v2 = b
+        return g1 * g2, v2 + g2 * v1
+
+    _, scanned = jax.lax.associative_scan(comb, (carry, contrib), axis=0)
+    out = jnp.take(scanned, lat.row_last, axis=0)
+    out = jnp.where(lat.valid[:, None], out, jnp.zeros((1, c), v.dtype))
     return out.at[lat.cap].set(0.0)
 
 

@@ -60,6 +60,10 @@ class SimplexGPConfig:
     cg_tol_train: float = 1.0
     cg_tol_eval: float = 1e-2
     max_cg_iters: int = 100
+    # lattice-MVM backend tier (kernels/blur/ops.py policy; DESIGN.md §8):
+    # "auto" picks fused_pallas/per_direction_pallas on TPU by VMEM fit and
+    # the fused single-jit XLA path elsewhere.
+    backend: str = "auto"
     precond_rank: int = 0  # 0 = no preconditioner (lattice MVMs are cheap)
     num_probes: int = 8
     max_lanczos_iters: int = 50
@@ -116,10 +120,13 @@ class SimplexGP:
         lat = build_lattice(z, spacing=st.spacing, r=st.r,
                             cap=self.capacity(*x.shape))
         w = jnp.asarray(st.weights, x.dtype)
+        taps = tuple(st.weights)
 
         def kxx(v: Array) -> Array:
             return os_ * filtering.filter_mvm(lat, v, w,
-                                              symmetrize=cfg.symmetrize)
+                                              symmetrize=cfg.symmetrize,
+                                              backend=cfg.backend,
+                                              taps=taps)
 
         def mvm(v: Array) -> Array:
             return kxx(v) + noise * v
@@ -143,13 +150,20 @@ class SimplexGP:
         if cfg.grad_mode == "paper":
             dw = jnp.asarray(st.dweights, x.dtype)
             spec = filtering.spec_for(st, cap=self.capacity(*x.shape),
-                                      symmetrize=cfg.symmetrize)
+                                      symmetrize=cfg.symmetrize,
+                                      backend=cfg.backend)
             kb = os_ * filtering.lattice_filter(z, b, w, dw, spec)
         else:  # autodiff through the barycentric interpolation (a.e. exact)
             lat = build_lattice(z, spacing=st.spacing, r=st.r,
                                 cap=self.capacity(*x.shape))
+            # Pallas kernels have no VJP; keep autodiff on the fused XLA
+            # tier even when the config would pick a Pallas backend.
+            bk = cfg.backend if cfg.backend in ("fused_xla", "xla") \
+                else "fused_xla"
             kb = os_ * filtering.filter_mvm(lat, b, w,
-                                            symmetrize=cfg.symmetrize)
+                                            symmetrize=cfg.symmetrize,
+                                            backend=bk,
+                                            taps=tuple(st.weights))
         return jnp.sum(a * kb) + noise * jnp.sum(a * b)
 
     def exact_row(self, params: GPParams, x: Array, i: Array) -> Array:

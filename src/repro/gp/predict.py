@@ -45,7 +45,8 @@ def cross_mvm(model: SimplexGP, params: GPParams, x: Array, xs: Array,
                         cap=model.capacity(n + ns, x.shape[1]))
     w = jnp.asarray(st.weights, x.dtype)
     vj = jnp.concatenate([v, jnp.zeros((ns, v.shape[1]), v.dtype)], axis=0)
-    out = filtering.filter_mvm(lat, vj, w, symmetrize=cfg.symmetrize)
+    out = filtering.filter_mvm(lat, vj, w, symmetrize=cfg.symmetrize,
+                               backend=cfg.backend, taps=tuple(st.weights))
     return os_ * out[n:]
 
 

@@ -1,41 +1,284 @@
-"""Public blur op: full (d+1)-direction sweep with backend dispatch."""
+"""Public lattice-MVM ops: backend policy + dispatch for the full operator.
+
+Backend tiers (DESIGN.md §8), chosen from (n, cap, d, r, c) and platform:
+
+  fused_pallas         one pallas_call for splat -> 2(d+1) sweeps -> slice;
+                       the value table lives in VMEM scratch throughout
+                       (fused.py). Engaged on TPU when every resident
+                       buffer fits the VMEM budget.
+  per_direction_pallas one pallas_call per directional sweep (kernel.py),
+                       XLA splat/slice around them. Resident gather source
+                       when the table fits; grid-blocked streaming variant
+                       for moderately oversized tables.
+  fused_xla            single-jit XLA composition with the scatter-free
+                       sorted-segment splat (lattice.splat_sorted) — the
+                       fast path on hosts without a TPU, and the same
+                       algorithm the fused kernel runs in VMEM.
+  xla                  the legacy reference composition (segment_sum splat
+                       + scan blur + slice). Keeps the seed semantics;
+                       always available, any table size, traced weights OK.
+
+``auto`` resolves per the table above. Pallas tiers need CONCRETE stencil
+taps (they are baked into the kernel); pass them via ``taps=`` (e.g. from
+``FilterSpec`` / ``Stencil.weights``) — ``auto`` falls back to the XLA tier
+when only traced weights are available rather than crash under jit.
+"""
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import lattice as lat_mod
 from repro.core.lattice import Lattice
-from repro.kernels.blur.kernel import DEFAULT_BLOCK_P, blur_direction_pallas
+from repro.kernels.blur.fused import fused_filter_pallas
+from repro.kernels.blur.kernel import (DEFAULT_BLOCK_P,
+                                       blur_direction_blocked_pallas,
+                                       blur_direction_pallas)
 
 Array = jax.Array
 
-# VMEM budget for keeping the value table resident (see kernel.py docstring)
-_VMEM_TABLE_BYTES = 8 * 1024 * 1024
+BACKENDS = ("auto", "fused_pallas", "per_direction_pallas", "fused_xla",
+            "xla")
+
+# VMEM budget for Pallas residency decisions. 16 MB/core physical; leave
+# headroom for the pipeline's double buffers and compiler spill.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+# resident-source per-direction tier: the table is the only large resident
+_TABLE_BUDGET_BYTES = 8 * 1024 * 1024
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def fits_vmem(cap1: int, c: int, itemsize: int = 4) -> bool:
-    return cap1 * c * itemsize <= _VMEM_TABLE_BYTES
+def fused_vmem_bytes(n: int, d: int, r: int, cap1: int, c: int,
+                     itemsize: int = 4) -> int:
+    """Total resident bytes of the fused kernel's memory plan (fused.py)."""
+    big = n * (d + 1)
+    table = 3 * cap1 * c            # table + work + accum scratch
+    splat_plan = big * (c + 3)      # contrib scan + sort_row/sort_w/head
+    slice_plan = 2 * n * (d + 1)    # seg_ids + weights
+    io = 2 * n * c                  # v + out
+    nbr_tiles = 2 * cap1 * 2 * r    # double-buffered direction tiles
+    misc = 2 * cap1                 # row_last + valid
+    return itemsize * (table + splat_plan + slice_plan + io + nbr_tiles
+                       + misc)
+
+
+def fits_vmem(n: int, d: int, r: int, cap1: int, c: int, *,
+              budget: int = VMEM_BUDGET_BYTES) -> bool:
+    """Gate for the fused kernel: ALL residents (not just the table) fit.
+
+    Callers should size ``cap`` realistically (lattice.suggest_capacity +
+    build_lattice_auto), not at the worst case n(d+1) — paper Table 3 shows
+    m is usually a small fraction of it, and this gate is exactly where
+    over-allocation turns into a lost fusion.
+    """
+    return fused_vmem_bytes(n, d, r, cap1, c) <= budget
+
+
+def table_fits_vmem(cap1: int, c: int, itemsize: int = 4) -> bool:
+    return cap1 * c * itemsize <= _TABLE_BUDGET_BYTES
+
+
+def pick_block_p(cap1: int, c: int = 1) -> int:
+    """Heuristic block_p: large enough to amortize per-step overhead, small
+    enough that a handful of tiles fit next to the resident table. Override
+    with REPRO_BLUR_BLOCK_P; ``autotune_block_p`` measures candidates."""
+    env = os.environ.get("REPRO_BLUR_BLOCK_P")
+    if env:
+        return int(env)
+    best = 256
+    for cand in (512, 1024, 2048, 4096):
+        if cand <= max(256, cap1 // 4) and cand * (c + 8) * 4 <= 1 << 20:
+            best = cand
+    return best
+
+
+_AUTOTUNE_CACHE: dict[tuple, int] = {}
+
+
+def autotune_block_p(lat: Lattice, c: int, taps: tuple[float, ...], *,
+                     candidates: tuple[int, ...] = (256, 512, 1024, 2048),
+                     iters: int = 3) -> int:
+    """Measure the per-direction kernel across block sizes on this device.
+
+    Only meaningful where the kernel compiles (TPU); elsewhere returns the
+    heuristic (timing the interpreter would autotune the wrong thing).
+    Cached per (platform, table-size bucket, c, r).
+    """
+    cap1 = lat.cap + 1
+    key = (jax.default_backend(), cap1.bit_length(), c, lat.r)
+    if key in _AUTOTUNE_CACHE:
+        return _AUTOTUNE_CACHE[key]
+    if not _on_tpu():
+        best = pick_block_p(cap1, c)
+        _AUTOTUNE_CACHE[key] = best
+        return best
+    import time
+    vals = jnp.zeros((cap1, c), jnp.float32)
+    best, best_t = None, float("inf")
+    for bp in candidates:
+        fn = jax.jit(functools.partial(blur_direction_pallas,
+                                       stencil=taps, block_p=bp))
+        jax.block_until_ready(fn(vals, lat.nbr[0]))  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(vals, lat.nbr[0]))
+        dt = time.perf_counter() - t0
+        if dt < best_t:
+            best, best_t = bp, dt
+    _AUTOTUNE_CACHE[key] = best
+    return best
+
+
+def choose_backend(*, n: int, d: int, r: int, cap1: int, c: int,
+                   taps_available: bool = True,
+                   platform: str | None = None) -> str:
+    """Resolve ``auto`` to a concrete backend for this problem + host."""
+    platform = platform or jax.default_backend()
+    if not taps_available:
+        # only the Pallas tiers bake taps into the kernel; the fused XLA
+        # tier (scatter-free sorted splat) takes traced weights fine
+        return "fused_xla"
+    if platform == "tpu":
+        if fits_vmem(n, d, r, cap1, c):
+            return "fused_pallas"
+        if table_fits_vmem(cap1, c):
+            return "per_direction_pallas"
+        # past the resident budget the blocked streaming kernel re-reads
+        # the table once per block_p-row source tile — traffic that always
+        # loses to the XLA gather at these sizes — so the policy prefers
+        # fused_xla; the blocked variant stays reachable explicitly via
+        # backend="per_direction_pallas" for strictly-VMEM-bound runs.
+        return "fused_xla"
+    # CPU/GPU hosts: the fused idea lands as one jitted XLA program with
+    # the scatter-free splat; Pallas runs only under explicit interpret.
+    return "fused_xla"
+
+
+# ---------------------------------------------------------------------------
+# Blur-only entry point (kept for kernel tests and the per-direction tier).
+# ---------------------------------------------------------------------------
 
 
 def blur_pallas(lat: Lattice, vals: Array, stencil: tuple[float, ...], *,
-                reverse: bool = False,
-                block_p: int = DEFAULT_BLOCK_P) -> Array:
-    """Sequential separable blur via the Pallas kernel (one call/direction).
+                reverse: bool = False, block_p: int | None = None,
+                interpret: bool | None = None) -> Array:
+    """Sequential separable blur via the Pallas kernels (one call/direction).
 
-    Drop-in replacement for repro.core.lattice.blur when the value table
-    fits VMEM; callers (core/filtering.py) choose via ``use_pallas_blur``.
+    Off-TPU this dispatches to the XLA blur — running the Pallas
+    interpreter by default was orders of magnitude slower than XLA; set
+    ``interpret=True`` explicitly to exercise the kernels in tests.
     """
+    if interpret is None:
+        if not _on_tpu():
+            w = jnp.asarray(stencil, vals.dtype)
+            return lat_mod.blur(lat, vals, w, reverse=reverse)
+        interpret = False
+    cap1, c = vals.shape
+    if block_p is None:
+        # measured on-device where the kernel compiles (cached per shape
+        # bucket); interpret mode gets the cheap heuristic
+        block_p = (pick_block_p(cap1, c) if interpret
+                   else autotune_block_p(lat, c, tuple(stencil)))
+    blocked = not table_fits_vmem(cap1, c)
+    fn = blur_direction_blocked_pallas if blocked else blur_direction_pallas
     order = range(lat.d + 1)
     if reverse:
         order = reversed(list(order))
-    interpret = not _on_tpu()
     for a in order:
-        vals = blur_direction_pallas(vals, lat.nbr[a], stencil,
-                                     block_p=block_p, interpret=interpret)
+        vals = fn(vals, lat.nbr[a], stencil, block_p=block_p,
+                  interpret=interpret)
     return vals
+
+
+# ---------------------------------------------------------------------------
+# Full-operator dispatch.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("symmetrize", "transpose"))
+def _fused_xla(lat: Lattice, v: Array, weights: Array, *,
+               symmetrize: bool, transpose: bool) -> Array:
+    table = lat_mod.splat_sorted(lat, v)
+    blurred = lat_mod.blur(lat, table, weights, reverse=transpose)
+    if symmetrize:
+        blurred_r = lat_mod.blur(lat, table, weights, reverse=not transpose)
+        blurred = 0.5 * (blurred + blurred_r)
+    return lat_mod.slice_(lat, blurred)
+
+
+def _xla_reference(lat: Lattice, v: Array, weights: Array, *,
+                   symmetrize: bool, transpose: bool) -> Array:
+    splatted = lat_mod.splat(lat, v)
+    blurred = lat_mod.blur(lat, splatted, weights, reverse=transpose)
+    if symmetrize:
+        blurred_r = lat_mod.blur(lat, splatted, weights,
+                                 reverse=not transpose)
+        blurred = 0.5 * (blurred + blurred_r)
+    return lat_mod.slice_(lat, blurred)
+
+
+def _concrete_taps(weights, taps):
+    """Concrete stencil taps, or None when only traced values exist."""
+    if taps is not None:
+        return tuple(float(t) for t in taps)
+    if weights is None:
+        return None
+    try:
+        return tuple(float(w) for w in jax.core.concrete_or_error(
+            None, weights, "lattice_mvm taps"))
+    except jax.errors.ConcretizationTypeError:
+        return None
+
+
+def lattice_mvm(lat: Lattice, v: Array, weights: Array | None = None, *,
+                taps: tuple[float, ...] | None = None,
+                symmetrize: bool = True, transpose: bool = False,
+                backend: str = "auto", block_p: int | None = None,
+                interpret: bool | None = None) -> Array:
+    """Apply W B W^T (or its transpose / symmetrization) with one of the
+    policy backends. ``weights`` (traced OK) and/or concrete ``taps`` must
+    describe the same (2r+1) stencil."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of "
+                         f"{BACKENDS}")
+    if weights is None and taps is None:
+        raise ValueError("lattice_mvm needs a stencil: pass weights= "
+                         "(array) and/or taps= (concrete tuple)")
+    concrete = _concrete_taps(weights, taps)
+    if backend == "auto":
+        backend = choose_backend(n=lat.n, d=lat.d, r=lat.r, cap1=lat.cap + 1,
+                                 c=v.shape[1],
+                                 taps_available=concrete is not None)
+    if backend in ("fused_pallas", "per_direction_pallas") and concrete is None:
+        raise ValueError(
+            f"backend {backend!r} needs concrete stencil taps; pass taps= "
+            "(e.g. Stencil.weights / FilterSpec.taps) instead of traced "
+            "weights")
+    if weights is None:
+        weights = jnp.asarray(concrete, v.dtype)
+
+    if backend == "fused_pallas":
+        run_interp = (not _on_tpu()) if interpret is None else interpret
+        return fused_filter_pallas(lat, v, concrete, symmetrize=symmetrize,
+                                   transpose=transpose, interpret=run_interp)
+    if backend == "per_direction_pallas":
+        splatted = lat_mod.splat(lat, v)
+        blurred = blur_pallas(lat, splatted, concrete, reverse=transpose,
+                              block_p=block_p, interpret=interpret)
+        if symmetrize:
+            blurred_r = blur_pallas(lat, splatted, concrete,
+                                    reverse=not transpose, block_p=block_p,
+                                    interpret=interpret)
+            blurred = 0.5 * (blurred + blurred_r)
+        return lat_mod.slice_(lat, blurred)
+    if backend == "fused_xla":
+        return _fused_xla(lat, v, weights, symmetrize=symmetrize,
+                          transpose=transpose)
+    return _xla_reference(lat, v, weights, symmetrize=symmetrize,
+                          transpose=transpose)

@@ -1,4 +1,17 @@
-"""Pure-jnp oracle for the lattice blur (one direction and full sweep)."""
+"""Pure-jnp oracles for the lattice MVM: blur sweeps and the full
+splat -> (d+1)-blur -> slice operator the fused kernel implements.
+
+Two splat oracles are provided because the fused backends sum each lattice
+point's contributions in sorted-segment order (scatter-free), not in the
+input order ``jax.ops.segment_sum`` uses; at large n the two orders differ
+by f32 accumulation noise (~1e-4 at n=64k), far above kernel-parity
+tolerances. Parity checks therefore compare against the oracle that shares
+the backend's summation structure:
+
+  * ``splat_sorted_ref``  — segmented associative scan (== fused_xla).
+  * ``splat_sorted_hs_ref`` — Hillis-Steele sweep (== the Pallas kernel's
+    in-VMEM loop, step for step).
+"""
 from __future__ import annotations
 
 import jax
@@ -33,3 +46,61 @@ def blur_ref(vals: Array, nbr: Array, stencil: Array, *,
     for a in dirs:
         vals = blur_direction_ref(vals, nbr[a], stencil, dump)
     return vals
+
+
+# ---------------------------------------------------------------------------
+# Full-operator oracle (splat -> blur -> slice), mirroring the fused kernel.
+# ---------------------------------------------------------------------------
+
+
+def splat_sorted_ref(lat, v: Array) -> Array:
+    """Scatter-free splat oracle: segmented associative scan over the
+    build-time sorted contributions (same order as lattice.splat_sorted)."""
+    contrib = lat.sort_w[:, None] * v[lat.sort_row]
+    carry = jnp.where(lat.seg_head, 0.0, 1.0)[:, None].astype(v.dtype)
+
+    def comb(a, b):
+        (g1, v1), (g2, v2) = a, b
+        return g1 * g2, v2 + g2 * v1
+
+    _, scanned = jax.lax.associative_scan(comb, (carry, contrib), axis=0)
+    out = jnp.where(lat.valid[:, None], scanned[lat.row_last], 0.0)
+    return out.at[lat.cap].set(0.0)
+
+
+def splat_sorted_hs_ref(lat, v: Array) -> Array:
+    """Same linear map via an explicit Hillis-Steele sweep — the exact
+    op-for-op order of the fused Pallas kernel's in-VMEM splat stage."""
+    big, c = lat.sort_row.shape[0], v.shape[1]
+    contrib = lat.sort_w[:, None] * v[lat.sort_row]
+    carry = jnp.where(lat.seg_head, 0.0, 1.0)[:, None].astype(v.dtype)
+    shift = 1
+    while shift < big:
+        zed = jnp.zeros((shift, 1), v.dtype)
+        contrib = contrib + carry * jnp.concatenate(
+            [jnp.zeros((shift, c), v.dtype), contrib[:-shift]], axis=0)
+        carry = carry * jnp.concatenate([zed, carry[:-shift]], axis=0)
+        shift *= 2
+    out = jnp.where(lat.valid[:, None], contrib[lat.row_last], 0.0)
+    return out.at[lat.cap].set(0.0)
+
+
+def slice_ref(lat, vals: Array) -> Array:
+    per_vertex = vals[lat.seg_ids].reshape(lat.n, lat.d + 1, -1)
+    return jnp.einsum("nkc,nk->nc", per_vertex, lat.weights)
+
+
+def filter_ref(lat, v: Array, stencil: Array, *, symmetrize: bool = True,
+               transpose: bool = False, splat_algo: str = "scan") -> Array:
+    """Full lattice MVM oracle: W [0.5(B + B^T)] W^T v (or unsymmetrized).
+
+    ``splat_algo`` selects which sorted-splat ordering to mirror ("scan" for
+    the XLA fused backend, "hs" for the Pallas kernel).
+    """
+    splat = splat_sorted_hs_ref if splat_algo == "hs" else splat_sorted_ref
+    table = splat(lat, v)
+    blurred = blur_ref(table, lat.nbr, stencil, reverse=transpose)
+    if symmetrize:
+        blurred_r = blur_ref(table, lat.nbr, stencil, reverse=not transpose)
+        blurred = 0.5 * (blurred + blurred_r)
+    return slice_ref(lat, blurred)

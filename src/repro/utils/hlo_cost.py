@@ -127,7 +127,13 @@ def _dot_flops(op: _Op, table: dict) -> float:
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
     csize = 1
     if m and op.operands:
-        lhs_shape = table.get(op.operands[0].split(" ")[-1], "")
+        # operand fragments are comma-split (typed shapes contain commas);
+        # the lhs NAME is the first token across fragments that resolves
+        # in the symbol table
+        names = [t.lstrip("%") for frag in op.operands
+                 for t in frag.split()]
+        named = [t for t in names if t in table]
+        lhs_shape = table.get(named[0], "") if named else ""
         linfo = _shape_info(lhs_shape)
         if linfo:
             dims = linfo[0][1]

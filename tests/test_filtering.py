@@ -137,7 +137,74 @@ def test_pallas_blur_path_matches_default(rng):
     st = make_stencil("rbf", 1)
     lat = build_lattice(x, spacing=st.spacing, r=1)
     w = jnp.asarray(st.weights, jnp.float32)
-    a = filtering.filter_mvm(lat, v, w, use_pallas=False)
+    a = filtering.filter_mvm(lat, v, w, backend="xla")
     b = filtering.filter_mvm(lat, v, w, use_pallas=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
                                atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["xla", "fused_xla",
+                                     "per_direction_pallas"])
+def test_backend_tiers_agree(rng, backend):
+    """Every dispatch tier computes the same operator (f32 noise apart)."""
+    x, v = _data(rng, 250, 4)
+    st = make_stencil("matern32", 1)
+    lat = build_lattice(x, spacing=st.spacing, r=1)
+    w = jnp.asarray(st.weights, jnp.float32)
+    want = filtering.filter_mvm(lat, v, w, backend="xla")
+    got = filtering.filter_mvm(lat, v, w, backend=backend,
+                               taps=tuple(st.weights))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_filter_mvm_traced_weights_under_jit(rng):
+    """Regression: traced weights under jit must not crash any backend
+    resolution — the seed's use_pallas path called float() on tracers."""
+    x, v = _data(rng, 150, 3)
+    st = make_stencil("rbf", 1)
+    lat = build_lattice(x, spacing=st.spacing, r=1)
+    w = jnp.asarray(st.weights, jnp.float32)
+
+    # auto: falls back to a taps-free tier instead of crashing
+    got = jax.jit(lambda ww, vv: filtering.filter_mvm(lat, vv, ww))(w, v)
+    want = filtering.filter_mvm(lat, v, w, backend="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+    # concrete taps via FilterSpec keep the Pallas tiers jit-compatible
+    got2 = jax.jit(lambda ww, vv: filtering.filter_mvm(
+        lat, vv, ww, use_pallas=True, taps=tuple(st.weights)))(w, v)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+    # a Pallas tier with ONLY traced weights is a loud error, not a crash
+    with pytest.raises(ValueError, match="concrete stencil taps"):
+        jax.jit(lambda ww, vv: filtering.filter_mvm(
+            lat, vv, ww, backend="per_direction_pallas"))(w, v)
+
+
+def test_mvm_operator_auto_cap_and_backends(rng):
+    """auto_cap right-sizes the table; fused backend matches the default."""
+    from repro.core.lattice import default_capacity, suggest_capacity
+
+    x, v = _data(rng, 300, 4, c=1)
+    st = make_stencil("matern32", 1)
+    mv, lat = filtering.mvm_operator(x, st, auto_cap=True)
+    assert not bool(lat.overflow)
+    assert lat.cap < default_capacity(300, 4)
+    assert lat.cap >= int(lat.m)
+    assert suggest_capacity(300, 4, st.spacing) <= default_capacity(300, 4)
+    mv_ref, lat_ref = filtering.mvm_operator(x, st, backend="xla")
+    np.testing.assert_allclose(np.asarray(mv(v)), np.asarray(mv_ref(v)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_grow_and_retry_recovers_from_overflow(rng):
+    """build_lattice_auto grows past an undersized initial capacity."""
+    from repro.core.lattice import build_lattice_auto
+
+    x = jnp.asarray(rng.normal(size=(400, 3)) * 4.0, jnp.float32)
+    lat = build_lattice_auto(x, spacing=0.5, r=1, cap=16)
+    assert not bool(lat.overflow)
+    assert lat.cap >= int(lat.m)
