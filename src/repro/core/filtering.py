@@ -2,7 +2,11 @@
 
 ``lattice_filter`` evaluates ``u ≈ K(z) v`` for a stationary kernel whose
 §4.1 stencil is supplied, via Splat -> Blur -> Slice on the permutohedral
-lattice (= the SKI decomposition W K_UU W^T of paper Eq. 8).
+lattice (= the SKI decomposition W K_UU W^T of paper Eq. 8). It rebuilds
+the lattice per call; ``lattice_filter_with`` is the shared-lattice variant
+(same values, same §4.2 VJP) closed over a prebuilt ``Lattice``, and
+``LatticeCache`` memoizes builds across eager calls — together they are the
+one-build-per-step pipeline of DESIGN.md §9.
 
 Gradients follow the paper exactly:
   * w.r.t. ``v``: the transpose filter (reverse-order blur); with
@@ -23,11 +27,14 @@ operator. Cost: 2x blur (splat/slice shared).
 """
 from __future__ import annotations
 
+import collections
 import functools
+import hashlib
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import lattice as lat_mod
 from repro.core.lattice import Lattice
@@ -128,6 +135,11 @@ def _filter_fwd(z, v, weights, dweights, spec):
 
 def _filter_bwd(spec, res, g):
     z, v, weights, dweights, lat = res
+    return _filter_bwd_core(spec, lat, z, v, weights, dweights, g)
+
+
+def _filter_bwd_core(spec, lat, z, v, weights, dweights, g):
+    """Shared §4.2 backward pass for both filter entry points."""
     n, d = z.shape
     c = v.shape[1]
 
@@ -163,6 +175,145 @@ def _filter_bwd(spec, res, g):
 
 
 lattice_filter.defvjp(_filter_fwd, _filter_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Prebuilt-lattice entry point (DESIGN.md §9): same operator + same §4.2
+# custom VJP, but closed over an existing Lattice instead of rebuilding one
+# per call. This is what lets a training step / posterior run on exactly ONE
+# lattice build: the solve path, the surrogate quad forms, and the §4.2
+# backward pass all share the ``lat`` the caller built.
+# ---------------------------------------------------------------------------
+
+
+def _lattice_zero_cotangent(lat: Lattice):
+    """Zero cotangent for the Lattice pytree (float0 for int/bool leaves).
+
+    The lattice's integer structure is non-differentiable by construction
+    (the §4.2 gradient deliberately ignores the rounding), so its cotangent
+    is symbolically zero.
+    """
+    def zero(leaf):
+        if jnp.issubdtype(jnp.result_type(leaf), jnp.inexact):
+            return jnp.zeros_like(leaf)
+        return np.zeros(jnp.shape(leaf), jax.dtypes.float0)
+
+    return jax.tree.map(zero, lat)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def lattice_filter_with(lat: Lattice, z: Array, v: Array, weights: Array,
+                        dweights: Array, spec: FilterSpec) -> Array:
+    """u ≈ K(z) v on a PREBUILT lattice, with the §4.2 custom VJP.
+
+    Identical to ``lattice_filter`` except the lattice is supplied instead
+    of rebuilt, so repeated quad forms within one step cost zero builds.
+    The caller must guarantee ``lat`` was built from these ``z`` (same
+    spacing/r); gradients w.r.t. ``z`` flow through the derivative-stencil
+    identity exactly as in ``lattice_filter`` — the lattice itself gets a
+    symbolic-zero cotangent, matching the §4.2 convention of not
+    differentiating the integer rounding.
+    """
+    return filter_mvm(lat, v, weights, symmetrize=spec.symmetrize,
+                      backend=spec.backend, taps=spec.taps)
+
+
+def _filter_with_fwd(lat, z, v, weights, dweights, spec):
+    u = filter_mvm(lat, v, weights, symmetrize=spec.symmetrize,
+                   backend=spec.backend, taps=spec.taps)
+    return u, (lat, z, v, weights, dweights)
+
+
+def _filter_with_bwd(spec, res, g):
+    lat, z, v, weights, dweights = res
+    dz, dv, zero_w, zero_dw = _filter_bwd_core(spec, lat, z, v, weights,
+                                               dweights, g)
+    return _lattice_zero_cotangent(lat), dz, dv, zero_w, zero_dw
+
+
+lattice_filter_with.defvjp(_filter_with_fwd, _filter_with_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Cross-call lattice reuse (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+
+def concrete_ls_key(ls) -> tuple | None:
+    """Hashable cache key from a concrete lengthscale; None while traced.
+
+    A rebuild is only *required* when the integer rounding of ``z = x / ls``
+    changes, but detecting that is as expensive as rebuilding — so the cache
+    keys conservatively on the exact concrete lengthscale values.
+    """
+    try:
+        arr = np.asarray(ls, dtype=np.float64)
+    except (jax.errors.ConcretizationTypeError, jax.errors.TracerArrayConversionError):
+        return None
+    return tuple(arr.reshape(-1).tolist())
+
+
+class LatticeCache:
+    """Small LRU memo of built lattices, keyed on the concrete geometry.
+
+    Keys combine a caller-chosen point-set tag (which arrays were embedded),
+    the concrete lengthscale values, and the static build parameters
+    ``(spacing, r, cap)`` — the full determinants of the integer lattice.
+    Under jit (traced lengthscales) the cache is transparently bypassed:
+    within one traced step, reuse is instead structural (build once, pass the
+    ``Lattice`` through ``operator(lat=...)`` / ``lattice_filter_with``).
+    """
+
+    def __init__(self, maxsize: int = 8):
+        self._store: collections.OrderedDict = collections.OrderedDict()
+        self._maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def point_set_tag(*arrays: Array) -> tuple | None:
+        """Content fingerprint of the (concrete) embedded point sets.
+
+        Hashes the raw bytes, so it is ROW-ORDER SENSITIVE — the lattice's
+        seg_ids/weights/splat plan depend on input order, so a reordered
+        point set must miss the cache. Returns None for traced inputs
+        (``get`` then bypasses the memo). Cost: one host transfer + hash,
+        trivial next to a build.
+        """
+        parts = []
+        for a in arrays:
+            if isinstance(a, jax.core.Tracer):
+                return None
+            arr = np.asarray(a)
+            parts.append((arr.shape, str(arr.dtype),
+                          hashlib.blake2b(arr.tobytes(),
+                                          digest_size=16).hexdigest()))
+        return tuple(parts)
+
+    def get(self, tag, z: Array, *, spacing: float, r: int,
+            cap: int | None, ls=None) -> Lattice:
+        """Return a cached lattice for this key, building on miss.
+
+        ``tag`` identifies the point set(s) behind ``z`` (use
+        ``point_set_tag``); ``ls`` is the concrete lengthscale the embedding
+        divided by (traced -> bypass).
+        """
+        ls_key = concrete_ls_key(ls) if ls is not None else ()
+        if tag is None or ls_key is None or isinstance(z, jax.core.Tracer):
+            return lat_mod.build_lattice(z, spacing=spacing, r=r, cap=cap)
+        key = (tag, ls_key, float(spacing), int(r),
+               None if cap is None else int(cap))
+        hit = self._store.get(key)
+        if hit is not None:
+            self._store.move_to_end(key)
+            self.hits += 1
+            return hit
+        self.misses += 1
+        lat = lat_mod.build_lattice(z, spacing=spacing, r=r, cap=cap)
+        self._store[key] = lat
+        while len(self._store) > self._maxsize:
+            self._store.popitem(last=False)
+        return lat
 
 
 def mvm_operator(z: Array, stencil: Stencil, *, cap: int | None = None,

@@ -13,9 +13,14 @@ static-shape primitives (see DESIGN.md §2):
   * splat is a ``segment_sum``, blur is ``gather + stencil reduction``,
     slice is ``take + barycentric contraction``.
 
-All shapes depend only on ``(n, d, r, cap)`` so the whole build is jittable
-and re-runs every time the lengthscale moves, exactly like the CUDA filter
-rebuilds its hash table per call.
+All shapes depend only on ``(n, d, r, cap)`` so the whole build is jittable.
+A build is only required when the *integer* lattice geometry changes — i.e.
+when the lengthscale/spacing moves enough to change the rounding of inputs
+to simplex vertices — which in practice means once per hyperparameter
+setting. Training/prediction share ONE build per step through
+``filtering.lattice_filter_with`` / ``filtering.LatticeCache`` (DESIGN.md
+§9); ``build_count()`` below exposes a call counter so benchmarks and smoke
+tests can assert the builds-per-step contract.
 
 Geometry facts used below (verified in tests/test_lattice.py):
   * the elevation basis E (paper Eq. 7 neighborhood) has orthogonal columns
@@ -139,7 +144,8 @@ class Lattice:
     seg_ids: Array  # (n*(d+1),) int32 in [0, cap]: slot per (input, vertex)
     weights: Array  # (n, d+1) f32 barycentric
     nbr: Array  # (d+1, cap+1, 2r) int32 in [0, cap]: blur gather table
-    overflow: Array  # () bool: m > cap (results invalid; grow cap and retry)
+    overflow: Array  # () bool: results invalid (capacity OR pack overflow)
+    pack_overflow: Array  # () bool: |coord| > 2^15 — growing cap CANNOT fix
     # --- sorted splat plan (DESIGN.md §8): the dedup sort already places all
     # (input, vertex) contributions of one lattice point contiguously; these
     # four arrays let splat run as gather + segmented prefix scan + gather,
@@ -159,17 +165,36 @@ def _lex_sort(cols: Sequence[Array], payloads: Sequence[Array]):
     return out[: len(cols)], out[len(cols):]
 
 
-# --- packed sort keys (§Perf iteration C1) ---------------------------------
+# --- build instrumentation --------------------------------------------------
+# ``build_lattice`` increments this on every Python-level call. Inside a jit
+# trace that is once per *traced* build, i.e. exactly the number of lattice
+# constructions baked into the compiled program — what the shared-lattice
+# pipeline (DESIGN.md §9) drives to 1 per training step / posterior.
+
+_BUILD_STATS = {"builds": 0}
+
+
+def build_count() -> int:
+    """Total ``build_lattice`` invocations (trace-level under jit)."""
+    return _BUILD_STATS["builds"]
+
+
+# --- packed sort keys (§Perf iteration C1/C2) -------------------------------
 # Lattice coordinates sum to zero, so the last one is redundant; the first
-# d are packed two-per-int32 (16-bit biased fields, order-preserving).
+# d are packed two-per-int32 (16-bit biased fields, wrap-tolerant: sorts
+# need only group equal keys adjacently, not order them meaningfully).
 # This halves (+1/(d+1)) the lex-sort key traffic of both the dedup sort
 # and the neighbor-table merge sort — the dominant cost of the lattice
-# build at houseelectric scale. Coordinates beyond +/-2^15 would corrupt
-# the packing; they instead raise the existing ``overflow`` flag (the same
-# grow-and-retry contract as capacity overflow).
+# build at houseelectric scale. C2 goes further: packing is lossless, so
+# the dedup sort carries NO coordinate payload columns (coords are
+# reconstructed by ``_unpack_key_cols`` after the sort), and the neighbor
+# sort folds its tag and payload into a single column. Coordinates beyond
+# +/-2^15 would corrupt the packing; they instead raise the existing
+# ``overflow`` flag (the same grow-and-retry contract as capacity overflow).
 
 _PACK_BIAS = 1 << 15
 _PACK_LIMIT = (1 << 15) - 2
+_TAG_SHIFT = 30  # neighbor-sort tag bit position (payload ids < 2^30)
 
 
 def _pack_key_cols(keys: Array) -> list[Array]:
@@ -185,6 +210,22 @@ def _pack_key_cols(keys: Array) -> list[Array]:
             lo = jnp.zeros_like(hi)
         cols.append((hi << 16) | lo)
     return cols
+
+
+def _unpack_key_cols(packed: Array, c: int) -> Array:
+    """(N, ceil((c-1)/2)) packed sort columns -> (N, c) int32 coords.
+
+    Exact inverse of ``_pack_key_cols`` within the +/-_PACK_LIMIT range;
+    the dropped last coordinate is recovered from the zero-sum constraint.
+    """
+    fields = []
+    for j in range(c - 1):
+        word = packed[:, j // 2]
+        f = (word >> 16) if j % 2 == 0 else word
+        fields.append((f & 0xFFFF).astype(jnp.int32) - _PACK_BIAS)
+    rest = jnp.stack(fields, axis=1)
+    last = -jnp.sum(rest, axis=1, keepdims=True)
+    return jnp.concatenate([rest, last], axis=1)
 
 
 def _pack_overflow(keys: Array) -> Array:
@@ -228,13 +269,16 @@ def build_lattice_auto(z: Array, *, spacing: float, r: int = 1,
         cap = suggest_capacity(n, d, spacing)
     for _ in range(max_tries):
         lat = build_lattice(z, spacing=spacing, r=r, cap=min(cap, worst))
+        if bool(lat.pack_overflow):
+            # coordinate range, not capacity: growth cannot help — return
+            # with the overflow flag set so the caller sees invalid results
+            return lat
         if not bool(lat.overflow) or cap >= worst:
             return lat
         cap *= growth
     return lat  # pragma: no cover - max_tries exhausts only past worst case
 
 
-@functools.partial(jax.jit, static_argnames=("r", "cap"))
 def build_lattice(z: Array, *, spacing: float, r: int = 1,
                   cap: int | None = None) -> Lattice:
     """Construct the lattice for (already lengthscale-normalized) inputs.
@@ -244,31 +288,40 @@ def build_lattice(z: Array, *, spacing: float, r: int = 1,
       spacing: §4.1 stencil spacing s (input-space distance of a lattice step).
       r: stencil radius (paper's blur order; Appendix A uses r=1).
       cap: static table capacity; defaults to the worst case n*(d+1).
+        Prefer an auto-sized cap (``build_lattice_auto`` outside jit) — every
+        per-lattice-point array scales with it.
     """
     n, d = z.shape
     if cap is None:
         cap = default_capacity(n, d)
+    _BUILD_STATS["builds"] += 1
+    return _build_lattice_impl(z, spacing=spacing, r=r, cap=cap)
 
+
+@functools.partial(jax.jit, static_argnames=("r", "cap"))
+def _build_lattice_impl(z: Array, *, spacing: float, r: int,
+                        cap: int) -> Lattice:
+    n, d = z.shape
     keys, weights = simplex_embed(z, spacing)  # (n, d+1, d+1), (n, d+1)
     flat = keys.reshape(n * (d + 1), d + 1)
     big = n * (d + 1)
 
     # ---- exact dedup via lexicographic sort over PACKED keys ---------------
+    # Packing is lossless (C2), so the only payload is the permutation; the
+    # sorted coordinates come back out of the packed key columns themselves.
     cols = _pack_key_cols(flat)
     payload = jnp.arange(big, dtype=jnp.int32)
-    coord_payload = [flat[:, j] for j in range(d + 1)]
-    sorted_cols, sorted_payloads = _lex_sort(cols,
-                                             [payload] + coord_payload)
-    perm = sorted_payloads[0]
-    skeys = jnp.stack(sorted_payloads[1:], axis=1)  # (big, d+1) sorted
+    sorted_cols, (perm,) = _lex_sort(cols, [payload])
     spacked = jnp.stack(sorted_cols, axis=1)
+    skeys = _unpack_key_cols(spacked, d + 1)  # (big, d+1) sorted coords
     new_group = jnp.concatenate([
         jnp.ones((1,), bool),
         jnp.any(spacked[1:] != spacked[:-1], axis=1),
     ])
     uid_sorted = jnp.cumsum(new_group.astype(jnp.int32)) - 1  # (big,)
     m = uid_sorted[-1] + 1
-    overflow = (m > cap) | _pack_overflow(flat)
+    pack_ovf = _pack_overflow(flat)
+    overflow = (m > cap) | pack_ovf
     slot_sorted = jnp.minimum(uid_sorted, cap)  # overflowed uniques -> dump row
 
     # lattice point coords (every member of a group writes the same value)
@@ -293,8 +346,9 @@ def build_lattice(z: Array, *, spacing: float, r: int = 1,
 
     return Lattice(coords=coords, valid=valid, m=m, seg_ids=seg_ids,
                    weights=weights, nbr=nbr, overflow=overflow,
-                   sort_row=sort_row, sort_w=sort_w, seg_head=new_group,
-                   row_last=row_last, d=d, r=r, cap=cap, n=n)
+                   pack_overflow=pack_ovf, sort_row=sort_row, sort_w=sort_w,
+                   seg_head=new_group, row_last=row_last, d=d, r=r, cap=cap,
+                   n=n)
 
 
 def _neighbor_table(coords: Array, valid: Array, *, d: int, r: int,
@@ -328,18 +382,19 @@ def _neighbor_table(coords: Array, valid: Array, *, d: int, r: int,
 
     all_keys = jnp.concatenate([t_packed, q_packed], axis=0)
     npk = all_keys.shape[1]
-    tag = jnp.concatenate([
-        jnp.zeros((cap + 1,), jnp.int32),
-        jnp.ones((nq,), jnp.int32),
+    # C2: tag and payload share one sort column — tag in the top bits so
+    # table entries (tag 0) still sort before queries within a coordinate
+    # group, payload in the low 30. One fewer comparator/payload column.
+    assert nq < (1 << _TAG_SHIFT), "query id would overflow the tag packing"
+    comb = jnp.concatenate([
+        jnp.arange(cap + 1, dtype=jnp.int32),  # tag 0 | table slot
+        (1 << _TAG_SHIFT) + jnp.arange(nq, dtype=jnp.int32),  # tag 1 | qid
     ])
-    payload = jnp.concatenate([
-        jnp.arange(cap + 1, dtype=jnp.int32),  # table slot
-        jnp.arange(nq, dtype=jnp.int32),  # query id
-    ])
-    key_cols = [all_keys[:, j] for j in range(npk)] + [tag]
-    sorted_cols, (spayload,) = _lex_sort(key_cols, [payload])
+    key_cols = [all_keys[:, j] for j in range(npk)] + [comb]
+    sorted_cols, _ = _lex_sort(key_cols, [])
     scoords = jnp.stack(sorted_cols[: npk], axis=1)  # (N, npk) packed
-    stag = sorted_cols[npk]
+    stag = sorted_cols[npk] >> _TAG_SHIFT
+    spayload = sorted_cols[npk] & ((1 << _TAG_SHIFT) - 1)
 
     nfull = scoords.shape[0]
     pos = jnp.arange(nfull, dtype=jnp.int32)

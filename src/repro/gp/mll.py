@@ -4,18 +4,26 @@ Paper Eq. 4 with the Gardner et al. (2018a) estimator:
 
   value:  -1/2 y^T u - 1/2 logdet(K_hat) - n/2 log 2pi,
           u = K_hat^{-1} y via CG (Appendix A tolerances),
-          logdet via SLQ (<= 100 Lanczos iterations).
+          logdet via SLQ on the Lanczos tridiagonals mBCG already collected
+          during the probe solves (BBMM's "log-det for free"; the separate
+          Lanczos pass survives as ``logdet_estimator="slq"`` and for
+          preconditioned runs, where the CG tridiagonals describe the
+          preconditioned operator rather than K_hat).
 
   grads:  dMLL/dtheta = 1/2 u^T (dK/dtheta) u - 1/2 E_z[w^T (dK/dtheta) z],
           w = K_hat^{-1} z, z Rademacher probes — realized by differentiating
           the *surrogate* S = 1/2 u^T K(theta) u - 1/(2p) sum_i w_i^T K(theta) z_i
           with u, w, z treated as constants. K(theta) applications go through
-          ``lattice_filter``'s §4.2 custom VJP, so every gradient is itself a
-          lattice filtering call — the paper's headline trick.
+          the §4.2 custom VJP, so every gradient is itself a lattice
+          filtering call — the paper's headline trick.
 
-The solves themselves use the non-differentiable fast path (one lattice
-per step, reused across all CG iterations). Optional RR-CG (Table 4)
-replaces the y-solve with the unbiased randomized-truncation estimator.
+One lattice build per step (DESIGN.md §9): the operator built for the
+solves is threaded into both surrogate ``quad_form`` calls via
+``lattice_filter_with``, so the whole step — solves, log-det, and all
+gradients — runs on a single build (down from 3+ in the seed). Set
+``SimplexGPConfig.shared_lattice=False`` for the seed's rebuild-per-call
+behavior (the benchmark baseline). Optional RR-CG (Table 4) replaces the
+y-solve with the unbiased randomized-truncation estimator.
 """
 from __future__ import annotations
 
@@ -25,9 +33,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.filtering import LatticeCache
 from repro.gp.models import GPParams, SimplexGP
 from repro.solvers.cg import cg as cg_solve
-from repro.solvers.lanczos import slq_logdet
+from repro.solvers.lanczos import slq_logdet, slq_logdet_from_cg
 from repro.solvers.pivoted_cholesky import pivoted_cholesky, woodbury_precond
 from repro.solvers.rrcg import rrcg as rrcg_solve
 
@@ -39,13 +48,16 @@ class MLLResult(NamedTuple):
     grads: GPParams  # d(-MLL)/d(raw params) — ready for a minimizer
     cg_iters: Array  # () iterations the solve used
     cg_residual: Array  # () final relative residual of the y-solve
+    overflow: Array  # () bool: lattice table overflowed (grow cap, retry)
+    pack_overflow: Array  # () bool: coord range overflow — growth can't fix
 
 
 def _solve_block(model: SimplexGP, params: GPParams, x: Array, y: Array,
-                 probes: Array, *, tol: float, rr_key: Array | None):
+                 probes: Array, *, tol: float, rr_key: Array | None,
+                 cap: int | None, cache: LatticeCache | None):
     """u = K^{-1} y and W = K^{-1} Z with one operator build."""
     cfg = model.config
-    op = model.operator(params, x)
+    op = model.operator(params, x, cap=cap, cache=cache)
 
     precond = None
     if cfg.precond_rank > 0:
@@ -65,12 +77,19 @@ def _solve_block(model: SimplexGP, params: GPParams, x: Array, y: Array,
                            min_iters=max(cfg.max_cg_iters // 4, 10),
                            max_iters=cfg.max_cg_iters)
         solves = solves.at[:, 0].set(rr.x[:, 0])
-    return op, solves, info
+    return op, solves, info, precond
 
 
 def mll_value_and_grad(model: SimplexGP, params: GPParams, x: Array,
                        y: Array, key: Array, *, tol: float | None = None,
-                       use_rrcg: bool = False) -> MLLResult:
+                       use_rrcg: bool = False, cap: int | None = None,
+                       cache: LatticeCache | None = None) -> MLLResult:
+    """One training-step MLL evaluation (value + surrogate gradients).
+
+    ``cap`` overrides the worst-case lattice capacity (thread a right-sized
+    cap chosen outside jit — see gp/train.py); ``cache`` memoizes
+    eager-mode lattice builds across calls with unchanged hyperparameters.
+    """
     cfg = model.config
     n = x.shape[0]
     tol = cfg.cg_tol_train if tol is None else tol
@@ -80,27 +99,46 @@ def mll_value_and_grad(model: SimplexGP, params: GPParams, x: Array,
                                    dtype=x.dtype)
 
     sg_params = jax.tree.map(jax.lax.stop_gradient, params)
-    op, solves, info = _solve_block(model, sg_params, x, y, probes,
-                                    tol=tol,
-                                    rr_key=rk if use_rrcg else None)
+    op, solves, info, precond = _solve_block(
+        model, sg_params, x, y, probes, tol=tol,
+        rr_key=rk if use_rrcg else None, cap=cap, cache=cache)
     u = jax.lax.stop_gradient(solves[:, 0])
     w = jax.lax.stop_gradient(solves[:, 1:])
 
     # ---- value ------------------------------------------------------------
-    logdet = slq_logdet(op.mvm, n, key=lk,
-                                    num_probes=cfg.num_probes,
-                                    num_iters=cfg.max_lanczos_iters,
-                                    dtype=x.dtype)
+    # The probe columns of the mBCG run ARE Lanczos processes on K_hat
+    # started at z_i/||z_i||, so their tridiagonals give the SLQ log-det with
+    # zero extra MVMs. (With a preconditioner they tridiagonalize P^{-1}K
+    # instead — fall back to the separate pass.)
+    if cfg.logdet_estimator == "cg" and precond is None:
+        probe_norms2 = jnp.full((cfg.num_probes,), float(n), x.dtype)
+        logdet = slq_logdet_from_cg(info.alphas[:, 1:], info.betas[:, 1:],
+                                    info.valid[:, 1:], probe_norms2)
+    else:
+        logdet = slq_logdet(op.mvm, n, key=lk,
+                            num_probes=cfg.num_probes,
+                            num_iters=cfg.max_lanczos_iters,
+                            dtype=x.dtype)
     mll = (-0.5 * jnp.dot(y, u) - 0.5 * logdet
            - 0.5 * n * math.log(2.0 * math.pi))
 
     # ---- gradients via the surrogate --------------------------------------
+    # Shared-lattice path: both quad forms filter on the operator's lattice
+    # (numerically identical params — sg_params is a stop_gradient of the
+    # same values), so the step performs exactly one build.
+    shared = (op.lattice if cfg.shared_lattice and cfg.grad_mode == "paper"
+              else None)
+
     def neg_surrogate(p: GPParams) -> Array:
-        data_fit = 0.5 * model.quad_form(p, x, u[:, None], u[:, None])
+        data_fit = 0.5 * model.quad_form(p, x, u[:, None], u[:, None],
+                                         lat=shared)
         # trace term: (1/2p) sum_i w_i^T K(theta) z_i
-        trace = (0.5 / cfg.num_probes) * model.quad_form(p, x, w, probes)
+        trace = (0.5 / cfg.num_probes) * model.quad_form(p, x, w, probes,
+                                                         lat=shared)
         return -(data_fit - trace)
 
     grads = jax.grad(neg_surrogate)(params)
     return MLLResult(mll=mll, grads=grads, cg_iters=info.iterations,
-                     cg_residual=info.residual_norms[0])
+                     cg_residual=info.residual_norms[0],
+                     overflow=op.lattice.overflow,
+                     pack_overflow=op.lattice.pack_overflow)

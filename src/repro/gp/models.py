@@ -4,7 +4,11 @@
 keep lengthscale/outputscale/noise positive, with the paper's minimum-noise
 floor (Appendix A: {1e-4, 1e-1}). ``SimplexGP.operator`` builds the lattice
 ONCE per hyperparameter setting and returns the K_hat MVM closure used by
-all CG/Lanczos iterations of that step — the paper's amortization.
+all CG/Lanczos iterations of that step — the paper's amortization — and
+that same ``Lattice`` is shared with the surrogate ``quad_form`` calls via
+``lat=`` (DESIGN.md §9), so a whole training step costs ONE build. Both
+``operator`` and ``quad_form`` also take prebuilt/right-sized lattices from
+outside jit (``lat=``/``cap=``) and an eager-mode ``LatticeCache``.
 """
 from __future__ import annotations
 
@@ -72,6 +76,19 @@ class SimplexGPConfig:
     #   actual lattice operator (beyond-paper; self-consistent with the
     #   approximate model the solves come from — see DESIGN.md §7).
     grad_mode: str = "paper"
+    # One lattice build per training step / posterior (DESIGN.md §9): the
+    # solve operator, the surrogate quad forms, and the prediction cross-
+    # MVMs all share a single Lattice. False restores the seed's
+    # rebuild-per-call behavior (the benchmark baseline). Note "autodiff"
+    # grad mode must rebuild inside the differentiated quad form regardless
+    # (its gradient flows through the barycentric construction itself).
+    shared_lattice: bool = True
+    # log-det estimator for the MLL value: "cg" reuses the Lanczos
+    # tridiagonals mBCG already collected during the probe solves (BBMM's
+    # free log-det; zero extra MVMs), "slq" runs the separate Lanczos pass.
+    # Preconditioned runs fall back to "slq" (the CG tridiagonals then
+    # describe the preconditioned operator, not K_hat).
+    logdet_estimator: str = "cg"
 
 
 class Operator(NamedTuple):
@@ -106,19 +123,33 @@ class SimplexGP:
     def capacity(self, n: int, d: int) -> int:
         return int(self.config.cap_factor * default_capacity(n, d))
 
-    def operator(self, params: GPParams, x: Array) -> Operator:
+    def operator(self, params: GPParams, x: Array, *,
+                 lat: Lattice | None = None, cap: int | None = None,
+                 cache: "filtering.LatticeCache | None" = None) -> Operator:
         """Build lattice once; return the K_hat MVM for CG loops.
 
         NOT differentiable (stop-gradient semantics by construction —
-        params enter only through concrete values). Use ``surrogate_quad``
+        params enter only through concrete values). Use ``quad_form``
         for gradient paths.
+
+        ``lat`` skips the build entirely (a prebuilt lattice for these
+        ``x`` under these params — e.g. an auto-sized one constructed
+        outside jit, or a shared joint lattice). ``cap`` overrides the
+        worst-case ``default_capacity`` table size, so jit-side code can
+        inherit a right-sized cap chosen outside jit (build_lattice_auto).
+        ``cache`` memoizes eager-mode builds across calls.
         """
         cfg = self.config
         st = self.stencil
         ls, os_, noise = self.constrained(params)
         z = x / ls[None, :]
-        lat = build_lattice(z, spacing=st.spacing, r=st.r,
-                            cap=self.capacity(*x.shape))
+        if lat is None:
+            cap = self.capacity(*x.shape) if cap is None else cap
+            if cache is not None:
+                lat = cache.get(cache.point_set_tag(x), z,
+                                spacing=st.spacing, r=st.r, cap=cap, ls=ls)
+            else:
+                lat = build_lattice(z, spacing=st.spacing, r=st.r, cap=cap)
         w = jnp.asarray(st.weights, x.dtype)
         taps = tuple(st.weights)
 
@@ -135,12 +166,18 @@ class SimplexGP:
                         outputscale=os_, lengthscale=ls)
 
     def quad_form(self, params: GPParams, x: Array, a: Array,
-                  b: Array) -> Array:
+                  b: Array, *, lat: Lattice | None = None) -> Array:
         """Differentiable ``sum(a * (K_hat(theta) b))`` (for MLL surrogates).
 
         Uses ``lattice_filter``'s §4.2 custom VJP, so gradients w.r.t.
         lengthscale flow through z = x / ls without differentiating the
-        integer lattice construction.
+        integer lattice construction. Passing ``lat`` (a lattice already
+        built for these x under numerically identical params — e.g.
+        ``operator(...).lattice``) skips the per-call rebuild via
+        ``lattice_filter_with``; values and §4.2 gradients are identical.
+        Only honored in "paper" grad mode — "autodiff" differentiates
+        through the barycentric weights of the build itself, so it must
+        construct the lattice inside the traced computation.
         """
         cfg = self.config
         st = self.stencil
@@ -149,10 +186,15 @@ class SimplexGP:
         w = jnp.asarray(st.weights, x.dtype)
         if cfg.grad_mode == "paper":
             dw = jnp.asarray(st.dweights, x.dtype)
-            spec = filtering.spec_for(st, cap=self.capacity(*x.shape),
+            cap = lat.cap if lat is not None else self.capacity(*x.shape)
+            spec = filtering.spec_for(st, cap=cap,
                                       symmetrize=cfg.symmetrize,
                                       backend=cfg.backend)
-            kb = os_ * filtering.lattice_filter(z, b, w, dw, spec)
+            if lat is not None:
+                kb = os_ * filtering.lattice_filter_with(lat, z, b, w, dw,
+                                                         spec)
+            else:
+                kb = os_ * filtering.lattice_filter(z, b, w, dw, spec)
         else:  # autodiff through the barycentric interpolation (a.e. exact)
             lat = build_lattice(z, spacing=st.spacing, r=st.r,
                                 cap=self.capacity(*x.shape))

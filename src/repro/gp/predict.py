@@ -7,10 +7,20 @@ times a vector is just another bilateral filter (paper §3.1).
 
 Variance: LOVE-style low-rank approximation. Run k Lanczos iterations on
 K_hat from a y-seeded start to get K_hat^{-1} ~= Q T^{-1} Q^T on the Krylov
-subspace; then var_* ~= k_*(0) - (K_{*,X} Q) T^{-1} (K_{*,X} Q)^T, where
-K_{*,X} Q is k more joint filterings (batched into one call with k channels).
-This mirrors GPyTorch's fast predictive variances the paper evaluates NLL
-with; accuracy grows with k.
+subspace; then var_* ~= k_*(0) - (K_{*,X} Q) T^{-1} (K_{*,X} Q)^T. This
+mirrors GPyTorch's fast predictive variances the paper evaluates NLL with;
+accuracy grows with k.
+
+One lattice build per posterior (DESIGN.md §9): the joint lattice over
+[X; X_*] serves BOTH the K_hat MVMs of the solve/Lanczos phases (restrict
+the joint filtering to the training rows) and the cross-covariance rows,
+and ``u`` and the LOVE basis ``Q`` are batched into a single (1+k)-channel
+cross filtering. The seed built three lattices per posterior (train
+operator + one per cross_mvm call); ``shared_lattice=False`` restores that
+as the benchmark baseline. Restricting the joint filtering to train rows is
+a slightly *denser* K_XX approximation than the train-only lattice (extra
+lattice points from X_* refine the blur graph) and keeps the solve
+consistent with the cross-covariance — both use the same W K_UU W^T.
 """
 from __future__ import annotations
 
@@ -20,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import filtering
-from repro.core.lattice import build_lattice
+from repro.core.filtering import LatticeCache
+from repro.core.lattice import Lattice, build_lattice
 from repro.gp.models import GPParams, SimplexGP
 from repro.solvers.cg import cg as cg_solve
 from repro.solvers.lanczos import lanczos as lanczos_run
@@ -31,36 +42,116 @@ Array = jax.Array
 class Posterior(NamedTuple):
     mean: Array  # (n*,)
     var: Array  # (n*,) latent-f variance (add noise for predictive y)
+    overflow: Array | bool = False  # lattice table overflow flag
+    pack_overflow: Array | bool = False  # coord range overflow (can't grow)
+
+
+def _joint_lattice(model: SimplexGP, params: GPParams, x: Array, xs: Array,
+                   *, cap: int | None,
+                   cache: LatticeCache | None) -> Lattice:
+    """Build (or fetch) the one lattice over the joint point set [x; xs]."""
+    st = model.stencil
+    ls, _, _ = model.constrained(params)
+    zj = jnp.concatenate([x, xs], axis=0) / ls[None, :]
+    n, ns = x.shape[0], xs.shape[0]
+    cap = model.capacity(n + ns, x.shape[1]) if cap is None else cap
+    if cache is not None:
+        return cache.get(cache.point_set_tag(x, xs), zj,
+                         spacing=st.spacing, r=st.r, cap=cap, ls=ls)
+    return build_lattice(zj, spacing=st.spacing, r=st.r, cap=cap)
+
+
+def _joint_filter(model: SimplexGP, lat: Lattice, v: Array,
+                  dtype) -> Array:
+    """One filtering of (n+ns, c) values on the joint lattice (no scales)."""
+    cfg = model.config
+    st = model.stencil
+    w = jnp.asarray(st.weights, dtype)
+    return filtering.filter_mvm(lat, v, w, symmetrize=cfg.symmetrize,
+                                backend=cfg.backend, taps=tuple(st.weights))
 
 
 def cross_mvm(model: SimplexGP, params: GPParams, x: Array, xs: Array,
-              v: Array) -> Array:
-    """K_{*,X} v via one joint-lattice filtering. v: (n, c) -> (n*, c)."""
-    cfg = model.config
-    st = model.stencil
-    ls, os_, _ = model.constrained(params)
+              v: Array, *, lat: Lattice | None = None,
+              cache: LatticeCache | None = None) -> Array:
+    """K_{*,X} v via one joint-lattice filtering. v: (n, c) -> (n*, c).
+
+    ``lat`` reuses a prebuilt joint lattice over [x; xs] (e.g. the one
+    ``posterior`` shares across its solve and cross-MVMs).
+    """
+    _, os_, _ = model.constrained(params)
     n, ns = x.shape[0], xs.shape[0]
-    zj = jnp.concatenate([x, xs], axis=0) / ls[None, :]
-    lat = build_lattice(zj, spacing=st.spacing, r=st.r,
-                        cap=model.capacity(n + ns, x.shape[1]))
-    w = jnp.asarray(st.weights, x.dtype)
+    if lat is None:
+        lat = _joint_lattice(model, params, x, xs, cap=None, cache=cache)
     vj = jnp.concatenate([v, jnp.zeros((ns, v.shape[1]), v.dtype)], axis=0)
-    out = filtering.filter_mvm(lat, vj, w, symmetrize=cfg.symmetrize,
-                               backend=cfg.backend, taps=tuple(st.weights))
+    out = _joint_filter(model, lat, vj, x.dtype)
     return os_ * out[n:]
 
 
 def posterior(model: SimplexGP, params: GPParams, x: Array, y: Array,
-              xs: Array, *, key: Array, variance_rank: int = 30) -> Posterior:
+              xs: Array, *, key: Array, variance_rank: int = 30,
+              cap: int | None = None,
+              cache: LatticeCache | None = None) -> Posterior:
+    """Predictive mean and LOVE variance at ``xs``.
+
+    ``cap`` overrides the joint lattice's worst-case capacity (thread a
+    right-sized one chosen outside jit); ``cache`` memoizes eager builds.
+    """
+    cfg = model.config
+    n, ns = x.shape[0], xs.shape[0]
+    if not cfg.shared_lattice:
+        return _posterior_rebuild(model, params, x, y, xs, key=key,
+                                  variance_rank=variance_rank)
+
+    ls, os_, noise = model.constrained(params)
+    lat = _joint_lattice(model, params, x, xs, cap=cap, cache=cache)
+
+    # K_hat MVM on the training block, through the shared joint lattice.
+    def mvm(v: Array) -> Array:
+        vj = jnp.concatenate([v, jnp.zeros((ns, v.shape[1]), v.dtype)],
+                             axis=0)
+        return os_ * _joint_filter(model, lat, vj, x.dtype)[:n] + noise * v
+
+    # mean solve
+    u, _ = cg_solve(mvm, y[:, None], tol=cfg.cg_tol_eval,
+                     max_iters=cfg.max_cg_iters)
+
+    # variance via Lanczos on K_hat (LOVE-style)
+    q0 = y[:, None] + 1e-3 * jax.random.normal(key, (n, 1), x.dtype)
+    lres = lanczos_run(mvm, q0, variance_rank)
+    q = lres.q[:, :, 0].T  # (n, k)
+    tdense = (jnp.diag(jnp.where(lres.valid[:, 0], lres.alphas[:, 0], 1.0))
+              + jnp.diag(lres.betas[:-1, 0] * lres.valid[:-1, 0]
+                         * lres.valid[1:, 0], 1)
+              + jnp.diag(lres.betas[:-1, 0] * lres.valid[:-1, 0]
+                         * lres.valid[1:, 0], -1))
+
+    # ONE batched cross filtering for [u | Q]: (1 + k) channels at once.
+    ksall = cross_mvm(model, params, x, xs, jnp.concatenate([u, q], axis=1),
+                      lat=lat)
+    mean = ksall[:, 0]
+    ksq = ksall[:, 1:]  # (n*, k)
+    sol = jnp.linalg.solve(tdense + 1e-6 * jnp.eye(tdense.shape[0], dtype=x.dtype),
+                           ksq.T)  # (k, n*)
+    prior_var = os_  # k(0) = outputscale for unit profiles
+    var = prior_var - jnp.sum(ksq * sol.T, axis=1)
+    return Posterior(mean=mean, var=jnp.clip(var, 1e-6, prior_var),
+                     overflow=lat.overflow, pack_overflow=lat.pack_overflow)
+
+
+def _posterior_rebuild(model: SimplexGP, params: GPParams, x: Array,
+                       y: Array, xs: Array, *, key: Array,
+                       variance_rank: int) -> Posterior:
+    """Seed-compatible path: train-lattice operator + per-call joint builds
+    (3 lattice constructions per posterior). Kept as the benchmark baseline
+    and for A/B parity checks against the shared-lattice path."""
     cfg = model.config
     op = model.operator(params, x)
 
-    # mean
     u, _ = cg_solve(op.mvm, y[:, None], tol=cfg.cg_tol_eval,
                      max_iters=cfg.max_cg_iters)
     mean = cross_mvm(model, params, x, xs, u)[:, 0]
 
-    # variance via Lanczos on K_hat (LOVE-style)
     q0 = y[:, None] + 1e-3 * jax.random.normal(key, (x.shape[0], 1), x.dtype)
     lres = lanczos_run(op.mvm, q0, variance_rank)
     q = lres.q[:, :, 0].T  # (n, k)
@@ -74,7 +165,9 @@ def posterior(model: SimplexGP, params: GPParams, x: Array, y: Array,
                            ksq.T)  # (k, n*)
     prior_var = op.outputscale  # k(0) = outputscale for unit profiles
     var = prior_var - jnp.sum(ksq * sol.T, axis=1)
-    return Posterior(mean=mean, var=jnp.clip(var, 1e-6, prior_var))
+    return Posterior(mean=mean, var=jnp.clip(var, 1e-6, prior_var),
+                     overflow=op.lattice.overflow,
+                     pack_overflow=op.lattice.pack_overflow)
 
 
 def nll(post: Posterior, noise: Array, y_true: Array) -> Array:

@@ -4,6 +4,16 @@ Adam(lr=0.1) on the BBMM MLL; CG tolerance 1.0 during training and 1e-2 at
 eval; early stopping on *validation RMSE* (§5.4: the MLL is non-monotone at
 high CG tolerance, so the best model is selected by held-out RMSE). Optional
 RR-CG solves reproduce Table 4's stability/runtime trade-off.
+
+Lattice sizing (DESIGN.md §9): the jitted step needs a STATIC table
+capacity, but the worst case n(d+1) over-allocates ~3-50x on real data
+(paper Table 3) and every per-lattice-point array — the neighbor table
+above all — scales with it. So ``fit`` right-sizes the cap OUTSIDE jit
+with ``build_lattice_auto`` under the initial hyperparameters (plus
+headroom for lengthscale drift), threads it into the jitted step/eval as a
+static argument, and watches the step's overflow flag: if training moves
+the lengthscale enough to overflow the table, the cap grows and the step
+re-jits — the grow-and-retry contract, amortized over the whole run.
 """
 from __future__ import annotations
 
@@ -14,12 +24,15 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.lattice import build_lattice_auto, default_capacity
 from repro.gp import mll as mll_mod
 from repro.gp import predict as predict_mod
 from repro.gp.models import GPParams, SimplexGP
 from repro.optim import Adam
 
 Array = jax.Array
+
+CAP_GROWTH = 4  # multiplier applied when a step/eval overflows its table
 
 
 @dataclasses.dataclass
@@ -30,9 +43,25 @@ class TrainResult:
     best_val_rmse: float
 
 
+def _auto_cap(model: SimplexGP, params: GPParams, x: Array, *,
+              headroom: int = 2) -> int:
+    """Right-size a static lattice capacity for ``x`` under ``params``.
+
+    One eager auto build (grow-and-retry on the overflow flag), then
+    ``headroom``x margin so moderate lengthscale shrink during training
+    does not immediately overflow the table.
+    """
+    st = model.stencil
+    ls = model.constrained(params)[0]
+    lat = build_lattice_auto(x / ls[None, :], spacing=st.spacing, r=st.r)
+    worst = default_capacity(*x.shape)
+    return min(max(lat.cap * headroom, 1024), worst)
+
+
 def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
         epochs: int = 100, lr: float = 0.1, seed: int = 0,
         use_rrcg: bool = False, patience: int = 15,
+        auto_cap: bool = True,
         log_fn: Callable[[str], None] | None = None) -> TrainResult:
     d = x.shape[1]
     params = GPParams.init(d)
@@ -40,18 +69,45 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
     opt_state = opt.init(params)
     key = jax.random.PRNGKey(seed)
 
-    @jax.jit
-    def step(params, opt_state, key):
-        res = mll_mod.mll_value_and_grad(model, params, x, y, key,
-                                         use_rrcg=use_rrcg)
-        new_params, new_state = opt.update(res.grads, opt_state, params)
-        return new_params, new_state, res.mll, res.cg_iters
+    worst = default_capacity(*x.shape)
+    worst_joint = default_capacity(x.shape[0] + x_val.shape[0], d)
+    if auto_cap and model.config.shared_lattice:
+        cap = _auto_cap(model, params, x)
+        cap_val = _auto_cap(model, params, jnp.concatenate([x, x_val]))
+    else:
+        cap, cap_val = worst, worst_joint
 
-    @jax.jit
-    def val_rmse(params, key):
-        post = predict_mod.posterior(model, params, x, y, x_val, key=key,
-                                     variance_rank=10)
-        return predict_mod.rmse(post, y_val)
+    def make_step(cap):
+        @jax.jit
+        def step(params, opt_state, key):
+            res = mll_mod.mll_value_and_grad(model, params, x, y, key,
+                                             use_rrcg=use_rrcg, cap=cap)
+            new_params, new_state = opt.update(res.grads, opt_state, params)
+            return (new_params, new_state, res.mll, res.cg_iters,
+                    res.overflow, res.pack_overflow)
+        return step
+
+    def make_val(cap_val):
+        @jax.jit
+        def val_rmse(params, key):
+            post = predict_mod.posterior(model, params, x, y, x_val,
+                                         key=key, variance_rank=10,
+                                         cap=cap_val)
+            return (predict_mod.rmse(post, y_val), post.overflow,
+                    post.pack_overflow)
+        return val_rmse
+
+    def _check_pack(povf):
+        # coordinate-range overflow corrupts results and no capacity can
+        # fix it — fail loudly rather than train on a broken lattice
+        if bool(povf):
+            raise RuntimeError(
+                "lattice coordinate range overflow (|coord| > 2^15): the "
+                "lengthscale/input scaling is degenerate (z = x / ls far "
+                "too spread). Rescale inputs or bound the lengthscale.")
+
+    step = make_step(cap)
+    val_rmse = make_val(cap_val)
 
     best = (jnp.inf, params)
     history = []
@@ -59,11 +115,26 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
     for epoch in range(epochs):
         key, k1, k2 = jax.random.split(key, 3)
         t0 = time.perf_counter()
-        params, opt_state, mll, iters = step(params, opt_state, k1)
+        while True:
+            new_params, new_state, mll, iters, ovf, povf = step(
+                params, opt_state, k1)
+            _check_pack(povf)
+            if not bool(ovf) or cap >= worst:
+                break
+            cap = min(cap * CAP_GROWTH, worst)  # stale grads: grow & redo
+            step = make_step(cap)
+        params, opt_state = new_params, new_state
         dt = time.perf_counter() - t0
-        rmse = float(val_rmse(params, k2))
+        while True:
+            rmse_v, ovf, povf = val_rmse(params, k2)
+            _check_pack(povf)
+            if not bool(ovf) or cap_val >= worst_joint:
+                break
+            cap_val = min(cap_val * CAP_GROWTH, worst_joint)
+            val_rmse = make_val(cap_val)
+        rmse = float(rmse_v)
         history.append(dict(epoch=epoch, mll=float(mll), val_rmse=rmse,
-                            cg_iters=int(iters), seconds=dt))
+                            cg_iters=int(iters), seconds=dt, cap=cap))
         if log_fn:
             log_fn(f"epoch {epoch:3d}  mll/n {float(mll)/x.shape[0]:+.4f}  "
                    f"val_rmse {rmse:.4f}  cg_iters {int(iters)}  {dt:.2f}s")

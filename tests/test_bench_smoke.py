@@ -1,0 +1,57 @@
+"""Tier-1 smoke of the training/prediction pipeline the benchmarks measure.
+
+One jitted training step and one posterior at tiny size, under the
+policy-chosen ("auto") fused backend, asserting the DESIGN.md §9 contract:
+exactly one lattice build each, finite outputs, no table overflow. A
+pipeline regression (extra rebuilds, broken fused dispatch, NaNs from the
+CG-reused log-det) fails here instead of only showing up in
+``benchmarks/fig_train_step.py``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lattice import build_count
+from repro.gp import (GPParams, SimplexGP, SimplexGPConfig,
+                      mll_value_and_grad, posterior)
+
+
+@pytest.mark.bench_smoke
+def test_training_step_smoke(rng):
+    n, d = 96, 2
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=n), jnp.float32)
+    model = SimplexGP(SimplexGPConfig(kernel="matern32", max_cg_iters=15,
+                                      num_probes=3, backend="auto"))
+    params = GPParams.init(d)
+
+    step = jax.jit(lambda p, k: mll_value_and_grad(model, p, x, y, k))
+    c0 = build_count()
+    res = jax.block_until_ready(step(params, jax.random.PRNGKey(0)))
+    assert build_count() - c0 == 1  # one lattice build per training step
+    assert np.isfinite(float(res.mll))
+    assert not bool(res.overflow)
+    for leaf in jax.tree.leaves(res.grads):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+@pytest.mark.bench_smoke
+def test_posterior_smoke(rng):
+    n, ns, d = 96, 24, 2
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=n), jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(ns, d)), jnp.float32)
+    model = SimplexGP(SimplexGPConfig(kernel="matern32", max_cg_iters=15,
+                                      backend="auto"))
+    params = GPParams.init(d)
+
+    c0 = build_count()
+    post = posterior(model, params, x, y, xs, key=jax.random.PRNGKey(1),
+                     variance_rank=6)
+    jax.block_until_ready(post.mean)
+    assert build_count() - c0 == 1  # one lattice build per posterior
+    assert post.mean.shape == (ns,)
+    assert bool(jnp.all(jnp.isfinite(post.mean)))
+    assert bool(jnp.all(post.var > 0))
+    assert not bool(post.overflow)

@@ -184,6 +184,105 @@ def test_filter_mvm_traced_weights_under_jit(rng):
             lat, vv, ww, backend="per_direction_pallas"))(w, v)
 
 
+def test_lattice_filter_with_matches_rebuild(rng):
+    """Shared-lattice entry point == rebuild-per-call: values AND §4.2
+    grads (acceptance: max abs err <= 1e-6; in fact bit-identical, since
+    the build is deterministic)."""
+    x, v = _data(rng, 250, 3)
+    g = jnp.asarray(rng.normal(size=v.shape), jnp.float32)
+    st = make_stencil("matern32", 1)
+    spec = filtering.spec_for(st)
+    w = jnp.asarray(st.weights, jnp.float32)
+    dw = jnp.asarray(st.dweights, jnp.float32)
+    lat = build_lattice(x, spacing=st.spacing, r=st.r)
+
+    a = filtering.lattice_filter(x, v, w, dw, spec)
+    b = filtering.lattice_filter_with(lat, x, v, w, dw, spec)
+    assert float(jnp.max(jnp.abs(a - b))) <= 1e-6
+
+    f_re = lambda z, vv: jnp.vdot(g, filtering.lattice_filter(
+        z, vv, w, dw, spec))
+    f_sh = lambda z, vv: jnp.vdot(g, filtering.lattice_filter_with(
+        lat, z, vv, w, dw, spec))
+    dz_re, dv_re = jax.grad(f_re, argnums=(0, 1))(x, v)
+    dz_sh, dv_sh = jax.grad(f_sh, argnums=(0, 1))(x, v)
+    np.testing.assert_allclose(np.asarray(dz_sh), np.asarray(dz_re),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dv_sh), np.asarray(dv_re),
+                               rtol=0, atol=1e-6)
+
+
+def test_lattice_filter_with_jit_traced_lattice(rng):
+    """The prebuilt-lattice VJP works with the lattice as a traced pytree
+    (the in-jit training-step usage) and performs zero builds."""
+    from repro.core.lattice import build_count
+
+    x, v = _data(rng, 150, 3)
+    g = jnp.asarray(rng.normal(size=v.shape), jnp.float32)
+    st = make_stencil("rbf", 1)
+    spec = filtering.spec_for(st)
+    w = jnp.asarray(st.weights, jnp.float32)
+    dw = jnp.asarray(st.dweights, jnp.float32)
+    lat = build_lattice(x, spacing=st.spacing, r=st.r)
+
+    @jax.jit
+    def grad_z(lt, z, vv):
+        return jax.grad(lambda zz: jnp.vdot(g, filtering.lattice_filter_with(
+            lt, zz, vv, w, dw, spec)))(z)
+
+    c0 = build_count()
+    dz = grad_z(lat, x, v)
+    assert build_count() - c0 == 0
+    want = jax.grad(lambda zz: jnp.vdot(g, filtering.lattice_filter(
+        zz, v, w, dw, spec)))(x)
+    np.testing.assert_allclose(np.asarray(dz), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lattice_cache_reuses_builds(rng):
+    """Same concrete (point set, lengthscale, spacing, r, cap) -> one build;
+    any key change -> fresh build; traced inputs bypass the memo."""
+    from repro.core.lattice import build_count
+
+    x, _ = _data(rng, 120, 3)
+    st = make_stencil("rbf", 1)
+    cache = filtering.LatticeCache()
+    tag = cache.point_set_tag(x)
+    ls = jnp.ones((3,), jnp.float32)
+
+    c0 = build_count()
+    l1 = cache.get(tag, x, spacing=st.spacing, r=st.r, cap=None, ls=ls)
+    l2 = cache.get(tag, x, spacing=st.spacing, r=st.r, cap=None, ls=ls)
+    assert l1 is l2
+    assert build_count() - c0 == 1
+    assert cache.hits == 1 and cache.misses == 1
+
+    # lengthscale moved -> rebuild
+    l3 = cache.get(tag, x, spacing=st.spacing, r=st.r, cap=None,
+                   ls=2.0 * ls)
+    assert l3 is not l1
+    assert build_count() - c0 == 2
+
+    # traced lengthscale -> bypass (fresh build, nothing cached)
+    jax.jit(lambda s: cache.get(tag, x, spacing=st.spacing, r=st.r,
+                                cap=None, ls=s).weights)(ls)
+    assert cache.misses == 2  # unchanged by the traced call
+
+    # traced points -> tag is None -> bypass (no crash under jit)
+    jax.jit(lambda xx: cache.get(cache.point_set_tag(xx), xx,
+                                 spacing=st.spacing, r=st.r, cap=None,
+                                 ls=ls).weights)(x)
+    assert cache.misses == 2
+
+    # row order matters: the lattice's seg_ids/splat plan are
+    # order-dependent, so a permuted point set must NOT hit the cache
+    perm = x[::-1]
+    assert cache.point_set_tag(perm) != tag
+    l4 = cache.get(cache.point_set_tag(perm), perm, spacing=st.spacing,
+                   r=st.r, cap=None, ls=ls)
+    assert l4 is not l1
+
+
 def test_mvm_operator_auto_cap_and_backends(rng):
     """auto_cap right-sizes the table; fused backend matches the default."""
     from repro.core.lattice import default_capacity, suggest_capacity

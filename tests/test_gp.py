@@ -72,6 +72,78 @@ def test_cross_mvm_matches_dense(rng):
     assert cos > 0.93
 
 
+def test_one_lattice_build_per_step_and_posterior(rng):
+    """DESIGN.md §9 contract: a jitted training step traces exactly ONE
+    lattice build (seed: 3 — operator + two surrogate quad forms), and a
+    posterior performs exactly ONE (seed: 3 — operator + two cross_mvm)."""
+    from repro.core.lattice import build_count
+
+    x, y, _ = _problem(rng, n=300)
+    xs, _, _ = _problem(np.random.default_rng(5), n=60)
+    params = GPParams.init(3)
+
+    shared = SimplexGP(SimplexGPConfig(max_cg_iters=20, num_probes=4,
+                                       max_lanczos_iters=10))
+    legacy = SimplexGP(SimplexGPConfig(max_cg_iters=20, num_probes=4,
+                                       max_lanczos_iters=10,
+                                       shared_lattice=False,
+                                       logdet_estimator="slq"))
+    for model, want in [(shared, 1), (legacy, 3)]:
+        step = jax.jit(lambda p, k, m=model: mll_value_and_grad(
+            m, p, x, y, k))
+        c0 = build_count()
+        jax.block_until_ready(step(params, jax.random.PRNGKey(0)))
+        assert build_count() - c0 == want
+
+        c0 = build_count()
+        post = posterior(model, params, x, y, xs,
+                         key=jax.random.PRNGKey(1), variance_rank=8)
+        jax.block_until_ready(post.mean)
+        assert build_count() - c0 == want
+
+
+def test_shared_lattice_matches_legacy_pipeline(rng):
+    """Shared-lattice step == rebuild-per-call step: identical surrogate
+    gradients (same lattice values by determinism) and MLL within
+    stochastic-estimator noise (different log-det estimators)."""
+    x, y, _ = _problem(rng, n=400)
+    params = GPParams.init(3, noise=0.2)
+    kw = dict(kernel="matern32", max_cg_iters=80, num_probes=8,
+              max_lanczos_iters=40)
+    shared = SimplexGP(SimplexGPConfig(**kw))
+    legacy = SimplexGP(SimplexGPConfig(shared_lattice=False,
+                                       logdet_estimator="slq", **kw))
+    key = jax.random.PRNGKey(2)
+    res_s = mll_value_and_grad(shared, params, x, y, key, tol=1e-4)
+    res_l = mll_value_and_grad(legacy, params, x, y, key, tol=1e-4)
+    for gs, gl in zip(jax.tree.leaves(res_s.grads),
+                      jax.tree.leaves(res_l.grads)):
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(gl),
+                                   rtol=1e-5, atol=1e-6)
+    # same CG solves -> same data-fit term; log-det estimators differ only
+    # by probe sets/depth, so values agree to estimator noise
+    assert abs(float(res_s.mll) - float(res_l.mll)) < \
+        0.05 * abs(float(res_l.mll)) + 20.0
+
+
+def test_posterior_shared_joint_lattice_close_to_legacy(rng):
+    """Single-joint-lattice posterior tracks the rebuild-per-call one (the
+    K_XX approximations differ slightly — the joint lattice is denser)."""
+    x, y, _ = _problem(rng, n=400)
+    xs, _, fs = _problem(np.random.default_rng(9), n=80)
+    params = GPParams.init(3, noise=0.1)
+    kw = dict(kernel="matern32", max_cg_iters=60)
+    shared = SimplexGP(SimplexGPConfig(**kw))
+    legacy = SimplexGP(SimplexGPConfig(shared_lattice=False, **kw))
+    ps = posterior(shared, params, x, y, xs, key=jax.random.PRNGKey(4))
+    pl = posterior(legacy, params, x, y, xs, key=jax.random.PRNGKey(4))
+    scale = float(jnp.std(pl.mean)) + 1e-6
+    assert float(jnp.max(jnp.abs(ps.mean - pl.mean))) < 0.35 * scale
+    assert bool(jnp.all(ps.var > 0))
+    # both beat predicting the mean on held-out structure
+    assert float(rmse(ps, fs)) < float(jnp.std(fs))
+
+
 def test_rrcg_training_step_runs(rng):
     x, y, _ = _problem(rng, n=300)
     model = SimplexGP(SimplexGPConfig(kernel="rbf", max_cg_iters=40,

@@ -121,3 +121,40 @@ def test_property_splat_slice_mass(d, seed):
     np.testing.assert_allclose(np.asarray(jnp.sum(splatted, axis=0)),
                                np.asarray(jnp.sum(v, axis=0)), rtol=2e-4,
                                atol=1e-4)
+
+
+@pytest.mark.parametrize("d", DIMS)
+def test_pack_unpack_roundtrip(rng, d):
+    """C2 fast build path: the packed sort keys are lossless, so coords can
+    be reconstructed from them after the dedup sort (no payload columns)."""
+    keys = jnp.asarray(rng.integers(-500, 500, size=(200, d)), jnp.int32)
+    keys = jnp.concatenate([keys, -jnp.sum(keys, axis=1, keepdims=True)],
+                           axis=1)  # zero-sum like real lattice coords
+    packed = jnp.stack(L._pack_key_cols(keys), axis=1)
+    got = L._unpack_key_cols(packed, d + 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(keys))
+
+
+def test_build_count_increments(rng):
+    x = _points(rng, 40, 3)
+    c0 = L.build_count()
+    L.build_lattice(x, spacing=1.0, r=1)
+    L.build_lattice(x, spacing=1.0, r=1)
+    assert L.build_count() - c0 == 2
+
+
+def test_pack_overflow_flag_distinct_from_capacity(rng):
+    """Coordinate-range overflow sets BOTH flags (results invalid) and is
+    reported separately, since growing cap cannot fix it; a plain capacity
+    overflow leaves pack_overflow clear."""
+    x = _points(rng, 64, 2, scale=5.0)
+    lat = L.build_lattice(x, spacing=0.5, r=1, cap=8)
+    assert bool(lat.overflow) and not bool(lat.pack_overflow)
+
+    far = _points(rng, 64, 2, scale=3e4)  # coords blow past +/-2^15
+    lat2 = L.build_lattice(far, spacing=0.5, r=1)
+    assert bool(lat2.pack_overflow) and bool(lat2.overflow)
+    # build_lattice_auto must not burn retries growing an unfixable table
+    lat3 = L.build_lattice_auto(far, spacing=0.5, r=1, cap=16)
+    assert bool(lat3.pack_overflow)
+    assert lat3.cap <= 64  # no useless growth

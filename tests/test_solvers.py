@@ -8,7 +8,7 @@ from _hyp_compat import given, settings, st
 from repro.core import kernels_math as km
 from repro.solvers import (cg, expected_iters, lanczos, pivoted_cholesky,
                            precond_logdet, rrcg, slq_logdet,
-                           woodbury_precond)
+                           slq_logdet_from_cg, woodbury_precond)
 
 
 def _spd(rng, n, cond=100.0):
@@ -81,6 +81,35 @@ def test_slq_logdet(rng):
                     num_probes=30, num_iters=60)
     want = float(jnp.linalg.slogdet(a)[1])
     assert abs(float(ld) - want) < 0.1 * abs(want)
+
+
+def test_slq_logdet_from_cg_matches_dense(rng):
+    """BBMM's free log-det: SLQ on the tridiagonals mBCG collects during
+    Rademacher-probe solves matches dense slogdet on a small SPD matrix."""
+    n, p = 250, 30
+    a = _spd(rng, n)
+    probes = jnp.asarray(np.sign(rng.normal(size=(n, p))), jnp.float32)
+    _, info = cg(lambda v: a @ v, probes, tol=1e-7, max_iters=120)
+    ld = slq_logdet_from_cg(info.alphas, info.betas, info.valid,
+                            jnp.full((p,), float(n), jnp.float32))
+    want = float(jnp.linalg.slogdet(a)[1])
+    assert abs(float(ld) - want) < 0.1 * abs(want)
+
+
+def test_slq_logdet_from_cg_agrees_with_separate_slq(rng):
+    """The two estimators target the same quantity; with matched probes and
+    depth they land within stochastic-estimator noise of each other."""
+    n, p = 200, 25
+    a = _spd(rng, n)
+    key = jax.random.PRNGKey(3)
+    probes = jax.random.rademacher(key, (n, p), dtype=jnp.float32)
+    _, info = cg(lambda v: a @ v, probes, tol=1e-7, max_iters=100)
+    ld_cg = float(slq_logdet_from_cg(info.alphas, info.betas, info.valid,
+                                     jnp.full((p,), float(n), jnp.float32)))
+    ld_slq = float(slq_logdet(lambda v: a @ v, n, key=key, num_probes=p,
+                              num_iters=60))
+    denom = max(abs(ld_slq), 1.0)
+    assert abs(ld_cg - ld_slq) < 0.15 * denom + 5.0
 
 
 def test_lanczos_extreme_eigenvalues(rng):
