@@ -73,25 +73,30 @@ def spec_for(stencil: Stencil, cap: int | None = None,
 def filter_mvm(lat: Lattice, v: Array, weights: Array | None = None, *,
                symmetrize: bool = True, backend: str = "auto",
                taps: tuple[float, ...] | None = None,
-               use_pallas: bool = False) -> Array:
+               use_pallas: bool = False, mesh=None,
+               axis_name: str = "data") -> Array:
     """Apply the lattice operator W B W^T to (n, c) values, lattice given.
 
     This is the fast path for CG loops: build the lattice once per
-    hyperparameter setting, then call this per iteration. ``backend``
-    selects the kernels/blur/ops.py tier ("auto" = policy choice);
-    ``use_pallas`` is the seed-compatible alias for the per-direction tier.
-    Concrete ``taps`` enable the Pallas/fused tiers under jit.
+    hyperparameter setting, then call this per iteration — the (n, c)
+    block contract means a whole mBCG/LOVE RHS block rides ONE call.
+    ``backend`` selects the kernels/blur/ops.py tier ("auto" = policy
+    choice); ``use_pallas`` is the seed-compatible alias for the
+    per-direction tier. Concrete ``taps`` enable the Pallas/fused tiers
+    under jit. ``mesh`` engages the sharded data-parallel tier
+    (one psum per MVM — DESIGN.md §10).
     """
     from repro.kernels.blur.ops import lattice_mvm
     if use_pallas:
         backend = "per_direction_pallas"
     return lattice_mvm(lat, v, weights, taps=taps, symmetrize=symmetrize,
-                       backend=backend)
+                       backend=backend, mesh=mesh, axis_name=axis_name)
 
 
 def filter_mvm_t(lat: Lattice, v: Array, weights: Array | None = None, *,
                  symmetrize: bool = True, backend: str = "auto",
-                 taps: tuple[float, ...] | None = None) -> Array:
+                 taps: tuple[float, ...] | None = None, mesh=None,
+                 axis_name: str = "data") -> Array:
     """Transpose operator F^T (== F when symmetrized).
 
     The fused backends give the transpose for free: it is the same kernel
@@ -99,7 +104,8 @@ def filter_mvm_t(lat: Lattice, v: Array, weights: Array | None = None, *,
     """
     from repro.kernels.blur.ops import lattice_mvm
     return lattice_mvm(lat, v, weights, taps=taps, symmetrize=symmetrize,
-                       transpose=True, backend=backend)
+                       transpose=True, backend=backend, mesh=mesh,
+                       axis_name=axis_name)
 
 
 # ---------------------------------------------------------------------------
@@ -290,19 +296,35 @@ class LatticeCache:
                                           digest_size=16).hexdigest()))
         return tuple(parts)
 
+    @staticmethod
+    def layout_key(z: Array) -> str:
+        """Device/sharding fingerprint of the array the build starts from.
+
+        The built lattice's arrays inherit ``z``'s placement and sharding
+        (a shard_map/GSPMD consumer sees committed shardings), so a lattice
+        built from an unsharded ``z`` must NOT be served to a request whose
+        ``z`` is sharded over a mesh (or lives on different devices) — the
+        MVM would silently reshard or, worse, mix layouts. str(sharding)
+        covers both the device set and the partition spec.
+        """
+        sharding = getattr(z, "sharding", None)
+        return "" if sharding is None else str(sharding)
+
     def get(self, tag, z: Array, *, spacing: float, r: int,
             cap: int | None, ls=None) -> Lattice:
         """Return a cached lattice for this key, building on miss.
 
         ``tag`` identifies the point set(s) behind ``z`` (use
         ``point_set_tag``); ``ls`` is the concrete lengthscale the embedding
-        divided by (traced -> bypass).
+        divided by (traced -> bypass). The key also includes ``z``'s
+        device/sharding layout so a sharded build never aliases an
+        unsharded one.
         """
         ls_key = concrete_ls_key(ls) if ls is not None else ()
         if tag is None or ls_key is None or isinstance(z, jax.core.Tracer):
             return lat_mod.build_lattice(z, spacing=spacing, r=r, cap=cap)
         key = (tag, ls_key, float(spacing), int(r),
-               None if cap is None else int(cap))
+               None if cap is None else int(cap), self.layout_key(z))
         hit = self._store.get(key)
         if hit is not None:
             self._store.move_to_end(key)
@@ -318,14 +340,19 @@ class LatticeCache:
 
 def mvm_operator(z: Array, stencil: Stencil, *, cap: int | None = None,
                  symmetrize: bool = True, backend: str = "auto",
-                 auto_cap: bool = False):
+                 auto_cap: bool = False, mesh=None,
+                 axis_name: str = "data"):
     """Build the lattice once and return (matvec, lattice).
 
-    ``matvec`` maps (n, c) -> (n, c); it is NOT differentiable w.r.t.
-    hyperparameters (use ``lattice_filter`` for the surrogate-loss terms).
-    ``auto_cap`` right-sizes the table with grow-and-retry (syncs on the
-    overflow flag, so only valid outside jit) — a much smaller table is
-    what keeps the fused backend's VMEM plan viable at real scales.
+    ``matvec`` maps (n, k) -> (n, k) — the multi-RHS block contract: CG,
+    mBCG, Lanczos, and LOVE hand it their whole RHS block so each solver
+    iteration costs exactly ONE lattice MVM regardless of k. It is NOT
+    differentiable w.r.t. hyperparameters (use ``lattice_filter`` for the
+    surrogate-loss terms). ``auto_cap`` right-sizes the table with
+    grow-and-retry (syncs on the overflow flag, so only valid outside
+    jit) — a much smaller table is what keeps the fused backend's VMEM
+    plan viable at real scales. ``mesh`` makes every MVM data-parallel
+    over its ``axis_name`` axis (sharding/simplex.py; one psum per call).
     """
     if auto_cap and cap is None:
         lat = lat_mod.build_lattice_auto(z, spacing=stencil.spacing,
@@ -338,6 +365,6 @@ def mvm_operator(z: Array, stencil: Stencil, *, cap: int | None = None,
 
     def matvec(v: Array) -> Array:
         return filter_mvm(lat, v, w, symmetrize=symmetrize, backend=backend,
-                          taps=taps)
+                          taps=taps, mesh=mesh, axis_name=axis_name)
 
     return matvec, lat

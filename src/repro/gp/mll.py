@@ -18,9 +18,12 @@ Paper Eq. 4 with the Gardner et al. (2018a) estimator:
           filtering call — the paper's headline trick.
 
 One lattice build per step (DESIGN.md §9): the operator built for the
-solves is threaded into both surrogate ``quad_form`` calls via
+solves is threaded into the surrogate ``quad_form`` via
 ``lattice_filter_with``, so the whole step — solves, log-det, and all
-gradients — runs on a single build (down from 3+ in the seed). Set
+gradients — runs on a single build (down from 3+ in the seed). The
+data-fit and trace surrogate terms are batched into ONE (1+p)-column
+quad form (quad_form is bilinear), so the step's gradient costs a single
+batched filtering + its single batched §4.2 backward filtering. Set
 ``SimplexGPConfig.shared_lattice=False`` for the seed's rebuild-per-call
 behavior (the benchmark baseline). Optional RR-CG (Table 4) replaces the
 y-solve with the unbiased randomized-truncation estimator.
@@ -54,10 +57,15 @@ class MLLResult(NamedTuple):
 
 def _solve_block(model: SimplexGP, params: GPParams, x: Array, y: Array,
                  probes: Array, *, tol: float, rr_key: Array | None,
-                 cap: int | None, cache: LatticeCache | None):
-    """u = K^{-1} y and W = K^{-1} Z with one operator build."""
+                 cap: int | None, cache: LatticeCache | None, mesh=None):
+    """u = K^{-1} y and W = K^{-1} Z with one operator build.
+
+    The whole ``[y | Z]`` block goes through ONE mBCG run whose matvec is
+    a single (n, 1+p)-channel lattice MVM per iteration — the multi-RHS
+    operator contract (never one MVM per probe).
+    """
     cfg = model.config
-    op = model.operator(params, x, cap=cap, cache=cache)
+    op = model.operator(params, x, cap=cap, cache=cache, mesh=mesh)
 
     precond = None
     if cfg.precond_rank > 0:
@@ -83,12 +91,15 @@ def _solve_block(model: SimplexGP, params: GPParams, x: Array, y: Array,
 def mll_value_and_grad(model: SimplexGP, params: GPParams, x: Array,
                        y: Array, key: Array, *, tol: float | None = None,
                        use_rrcg: bool = False, cap: int | None = None,
-                       cache: LatticeCache | None = None) -> MLLResult:
+                       cache: LatticeCache | None = None,
+                       mesh=None) -> MLLResult:
     """One training-step MLL evaluation (value + surrogate gradients).
 
     ``cap`` overrides the worst-case lattice capacity (thread a right-sized
     cap chosen outside jit — see gp/train.py); ``cache`` memoizes
     eager-mode lattice builds across calls with unchanged hyperparameters.
+    ``mesh`` shards every solve-phase MVM over its "data" axis (DESIGN.md
+    §10; n must divide the axis size).
     """
     cfg = model.config
     n = x.shape[0]
@@ -101,7 +112,7 @@ def mll_value_and_grad(model: SimplexGP, params: GPParams, x: Array,
     sg_params = jax.tree.map(jax.lax.stop_gradient, params)
     op, solves, info, precond = _solve_block(
         model, sg_params, x, y, probes, tol=tol,
-        rr_key=rk if use_rrcg else None, cap=cap, cache=cache)
+        rr_key=rk if use_rrcg else None, cap=cap, cache=cache, mesh=mesh)
     u = jax.lax.stop_gradient(solves[:, 0])
     w = jax.lax.stop_gradient(solves[:, 1:])
 
@@ -123,19 +134,23 @@ def mll_value_and_grad(model: SimplexGP, params: GPParams, x: Array,
            - 0.5 * n * math.log(2.0 * math.pi))
 
     # ---- gradients via the surrogate --------------------------------------
-    # Shared-lattice path: both quad forms filter on the operator's lattice
-    # (numerically identical params — sg_params is a stop_gradient of the
-    # same values), so the step performs exactly one build.
+    # Shared-lattice path: the surrogate quad form filters on the operator's
+    # lattice (numerically identical params — sg_params is a stop_gradient
+    # of the same values), so the step performs exactly one build.
+    #
+    # Multi-RHS: quad_form is bilinear, so the data-fit and trace terms
+    # batch into ONE (1+p)-column call — the §4.2 backward then also runs
+    # as a single batched filtering instead of one per term:
+    #   S = 1/2 u^T K u - 1/(2p) sum_i w_i^T K z_i = sum(A * K_hat B),
+    #   A = [1/2 u | -1/(2p) W],  B = [u | Z].
     shared = (op.lattice if cfg.shared_lattice and cfg.grad_mode == "paper"
               else None)
+    a_blk = jnp.concatenate([0.5 * u[:, None],
+                             (-0.5 / cfg.num_probes) * w], axis=1)
+    b_blk = jnp.concatenate([u[:, None], probes], axis=1)
 
     def neg_surrogate(p: GPParams) -> Array:
-        data_fit = 0.5 * model.quad_form(p, x, u[:, None], u[:, None],
-                                         lat=shared)
-        # trace term: (1/2p) sum_i w_i^T K(theta) z_i
-        trace = (0.5 / cfg.num_probes) * model.quad_form(p, x, w, probes,
-                                                         lat=shared)
-        return -(data_fit - trace)
+        return -model.quad_form(p, x, a_blk, b_blk, lat=shared)
 
     grads = jax.grad(neg_surrogate)(params)
     return MLLResult(mll=mll, grads=grads, cg_iters=info.iterations,

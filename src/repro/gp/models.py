@@ -125,8 +125,13 @@ class SimplexGP:
 
     def operator(self, params: GPParams, x: Array, *,
                  lat: Lattice | None = None, cap: int | None = None,
-                 cache: "filtering.LatticeCache | None" = None) -> Operator:
+                 cache: "filtering.LatticeCache | None" = None,
+                 mesh=None, axis_name: str = "data") -> Operator:
         """Build lattice once; return the K_hat MVM for CG loops.
+
+        The MVM obeys the multi-RHS block contract: (n, k) in, (n, k)
+        out, one lattice filtering per call — mBCG's ``[y | Z]`` block
+        and LOVE's Krylov starts all ride a single MVM per iteration.
 
         NOT differentiable (stop-gradient semantics by construction —
         params enter only through concrete values). Use ``quad_form``
@@ -137,7 +142,9 @@ class SimplexGP:
         outside jit, or a shared joint lattice). ``cap`` overrides the
         worst-case ``default_capacity`` table size, so jit-side code can
         inherit a right-sized cap chosen outside jit (build_lattice_auto).
-        ``cache`` memoizes eager-mode builds across calls.
+        ``cache`` memoizes eager-mode builds across calls. ``mesh`` runs
+        every MVM data-parallel over its ``axis_name`` axis (DESIGN.md
+        §10: sharded splat/slice, replicated blur, one psum per MVM).
         """
         cfg = self.config
         st = self.stencil
@@ -157,7 +164,8 @@ class SimplexGP:
             return os_ * filtering.filter_mvm(lat, v, w,
                                               symmetrize=cfg.symmetrize,
                                               backend=cfg.backend,
-                                              taps=taps)
+                                              taps=taps, mesh=mesh,
+                                              axis_name=axis_name)
 
         def mvm(v: Array) -> Array:
             return kxx(v) + noise * v

@@ -62,40 +62,47 @@ def _joint_lattice(model: SimplexGP, params: GPParams, x: Array, xs: Array,
 
 
 def _joint_filter(model: SimplexGP, lat: Lattice, v: Array,
-                  dtype) -> Array:
+                  dtype, mesh=None) -> Array:
     """One filtering of (n+ns, c) values on the joint lattice (no scales)."""
     cfg = model.config
     st = model.stencil
     w = jnp.asarray(st.weights, dtype)
     return filtering.filter_mvm(lat, v, w, symmetrize=cfg.symmetrize,
-                                backend=cfg.backend, taps=tuple(st.weights))
+                                backend=cfg.backend, taps=tuple(st.weights),
+                                mesh=mesh)
 
 
 def cross_mvm(model: SimplexGP, params: GPParams, x: Array, xs: Array,
               v: Array, *, lat: Lattice | None = None,
-              cache: LatticeCache | None = None) -> Array:
+              cache: LatticeCache | None = None, mesh=None) -> Array:
     """K_{*,X} v via one joint-lattice filtering. v: (n, c) -> (n*, c).
 
-    ``lat`` reuses a prebuilt joint lattice over [x; xs] (e.g. the one
-    ``posterior`` shares across its solve and cross-MVMs).
+    Multi-RHS by construction: a (n, c) block of cross-covariance RHS
+    costs the same single filtering as one column. ``lat`` reuses a
+    prebuilt joint lattice over [x; xs] (e.g. the one ``posterior``
+    shares across its solve and cross-MVMs); ``mesh`` shards the joint
+    filtering data-parallel (n + n* must divide the "data" axis).
     """
     _, os_, _ = model.constrained(params)
     n, ns = x.shape[0], xs.shape[0]
     if lat is None:
         lat = _joint_lattice(model, params, x, xs, cap=None, cache=cache)
     vj = jnp.concatenate([v, jnp.zeros((ns, v.shape[1]), v.dtype)], axis=0)
-    out = _joint_filter(model, lat, vj, x.dtype)
+    out = _joint_filter(model, lat, vj, x.dtype, mesh=mesh)
     return os_ * out[n:]
 
 
 def posterior(model: SimplexGP, params: GPParams, x: Array, y: Array,
               xs: Array, *, key: Array, variance_rank: int = 30,
               cap: int | None = None,
-              cache: LatticeCache | None = None) -> Posterior:
+              cache: LatticeCache | None = None, mesh=None) -> Posterior:
     """Predictive mean and LOVE variance at ``xs``.
 
     ``cap`` overrides the joint lattice's worst-case capacity (thread a
     right-sized one chosen outside jit); ``cache`` memoizes eager builds.
+    ``mesh`` shards every joint-lattice filtering — the solve MVMs, the
+    LOVE Lanczos MVMs, and the batched [u | Q] cross filtering — over its
+    "data" axis, one psum each (DESIGN.md §10).
     """
     cfg = model.config
     n, ns = x.shape[0], xs.shape[0]
@@ -110,7 +117,8 @@ def posterior(model: SimplexGP, params: GPParams, x: Array, y: Array,
     def mvm(v: Array) -> Array:
         vj = jnp.concatenate([v, jnp.zeros((ns, v.shape[1]), v.dtype)],
                              axis=0)
-        return os_ * _joint_filter(model, lat, vj, x.dtype)[:n] + noise * v
+        return (os_ * _joint_filter(model, lat, vj, x.dtype, mesh=mesh)[:n]
+                + noise * v)
 
     # mean solve
     u, _ = cg_solve(mvm, y[:, None], tol=cfg.cg_tol_eval,
@@ -128,7 +136,7 @@ def posterior(model: SimplexGP, params: GPParams, x: Array, y: Array,
 
     # ONE batched cross filtering for [u | Q]: (1 + k) channels at once.
     ksall = cross_mvm(model, params, x, xs, jnp.concatenate([u, q], axis=1),
-                      lat=lat)
+                      lat=lat, mesh=mesh)
     mean = ksall[:, 0]
     ksq = ksall[:, 1:]  # (n*, k)
     sol = jnp.linalg.solve(tdense + 1e-6 * jnp.eye(tdense.shape[0], dtype=x.dtype),

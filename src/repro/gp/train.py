@@ -61,8 +61,12 @@ def _auto_cap(model: SimplexGP, params: GPParams, x: Array, *,
 def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
         epochs: int = 100, lr: float = 0.1, seed: int = 0,
         use_rrcg: bool = False, patience: int = 15,
-        auto_cap: bool = True,
+        auto_cap: bool = True, mesh=None,
         log_fn: Callable[[str], None] | None = None) -> TrainResult:
+    """``mesh`` runs every solve/posterior MVM data-parallel over the
+    mesh's "data" axis (DESIGN.md §10); n and n + n_val must divide the
+    axis size. The lattice build and the surrogate gradients stay
+    single-device — the per-iteration MVMs are where the time goes."""
     d = x.shape[1]
     params = GPParams.init(d)
     opt = Adam(learning_rate=lr)
@@ -81,7 +85,8 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
         @jax.jit
         def step(params, opt_state, key):
             res = mll_mod.mll_value_and_grad(model, params, x, y, key,
-                                             use_rrcg=use_rrcg, cap=cap)
+                                             use_rrcg=use_rrcg, cap=cap,
+                                             mesh=mesh)
             new_params, new_state = opt.update(res.grads, opt_state, params)
             return (new_params, new_state, res.mll, res.cg_iters,
                     res.overflow, res.pack_overflow)
@@ -92,7 +97,7 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
         def val_rmse(params, key):
             post = predict_mod.posterior(model, params, x, y, x_val,
                                          key=key, variance_rank=10,
-                                         cap=cap_val)
+                                         cap=cap_val, mesh=mesh)
             return (predict_mod.rmse(post, y_val), post.overflow,
                     post.pack_overflow)
         return val_rmse

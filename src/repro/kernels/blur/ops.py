@@ -223,6 +223,27 @@ def _xla_reference(lat: Lattice, v: Array, weights: Array, *,
     return lat_mod.slice_(lat, blurred)
 
 
+# --- MVM instrumentation ----------------------------------------------------
+# ``lattice_mvm`` bumps these on every Python-level call (trace-level under
+# jit/scan — the number of lattice MVMs baked into the compiled program,
+# exactly like ``lattice.build_count``). ``cols`` accumulates the channel
+# width of each call, so a solver that batches k RHS into ONE (n, k) MVM per
+# iteration shows up as calls=1, cols=k — while a per-column loop would show
+# calls=k. tests/test_solvers.py pins the mBCG contract with this.
+
+_MVM_STATS = {"calls": 0, "cols": 0}
+
+
+def mvm_count() -> int:
+    """Total ``lattice_mvm`` invocations (trace-level under jit)."""
+    return _MVM_STATS["calls"]
+
+
+def mvm_cols() -> int:
+    """Total RHS columns across all ``lattice_mvm`` invocations."""
+    return _MVM_STATS["cols"]
+
+
 def _concrete_taps(weights, taps):
     """Concrete stencil taps, or None when only traced values exist."""
     if taps is not None:
@@ -240,16 +261,31 @@ def lattice_mvm(lat: Lattice, v: Array, weights: Array | None = None, *,
                 taps: tuple[float, ...] | None = None,
                 symmetrize: bool = True, transpose: bool = False,
                 backend: str = "auto", block_p: int | None = None,
-                interpret: bool | None = None) -> Array:
+                interpret: bool | None = None, mesh=None,
+                axis_name: str = "data") -> Array:
     """Apply W B W^T (or its transpose / symmetrization) with one of the
     policy backends. ``weights`` (traced OK) and/or concrete ``taps`` must
-    describe the same (2r+1) stencil."""
+    describe the same (2r+1) stencil.
+
+    ``mesh`` selects the data-parallel tier (sharding/simplex.py): rows of
+    ``v`` shard over the mesh's ``axis_name`` axis, the blur table is
+    replicated, and the whole MVM costs ONE psum. The per-device compute is
+    plain XLA, so ``backend`` is ignored on that path.
+    """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; want one of "
                          f"{BACKENDS}")
     if weights is None and taps is None:
         raise ValueError("lattice_mvm needs a stencil: pass weights= "
                          "(array) and/or taps= (concrete tuple)")
+    _MVM_STATS["calls"] += 1
+    _MVM_STATS["cols"] += int(v.shape[1])
+    if mesh is not None:
+        from repro.sharding.simplex import sharded_lattice_mvm
+        return sharded_lattice_mvm(lat, v, weights, taps=taps,
+                                   mesh=mesh, axis_name=axis_name,
+                                   symmetrize=symmetrize,
+                                   transpose=transpose)
     concrete = _concrete_taps(weights, taps)
     if backend == "auto":
         backend = choose_backend(n=lat.n, d=lat.d, r=lat.r, cap1=lat.cap + 1,

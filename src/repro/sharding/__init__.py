@@ -1,3 +1,3 @@
-from repro.sharding import partition
+from repro.sharding import partition, simplex
 
-__all__ = ["partition"]
+__all__ = ["partition", "simplex"]

@@ -1,0 +1,174 @@
+"""Data-parallel Simplex-GP: the sharded lattice MVM (DESIGN.md §10).
+
+The splat→blur→slice operator decomposes cleanly over devices because the
+two big per-*point* objects (inputs and values) and the one per-*lattice-
+point* object (the deduped value table) have wildly different sizes: the
+table is m ≲ n(d+1) rows but in practice a small fraction of it (paper
+Table 3), so it is cheap to REPLICATE, while the n data rows are what
+actually scale — so they are SHARDED:
+
+  splat   local segment-sum of the device's (n/dev)(d+1) contributions
+          into a full-size (cap+1, c) table, then ONE ``psum`` — the only
+          collective of the whole MVM;
+  blur    the 2(d+1) directional sweeps run replicated on the summed
+          table (identical work per device; no communication);
+  slice   purely local — each device gathers table rows for its own
+          points via its shard of ``seg_ids``/barycentric weights.
+
+The per-point lattice arrays (``seg_ids``, ``weights``) carry *global*
+slot ids in [0, cap], so sharding them by point rows needs no re-indexing.
+The lattice is built once, globally (the build is already amortized to one
+per step — DESIGN.md §9); this module distributes the per-iteration MVMs,
+which is where CG/mBCG/LOVE spend their time.
+
+One-psum-per-MVM is a hard contract: ``count_primitive`` below lets tests
+and benchmarks assert it on the jaxpr (``symmetrize`` reuses the same
+summed table for both sweep orders, so it adds no collective).
+
+Everything is plain XLA inside ``shard_map`` — on CPU hosts with
+``--xla_force_host_platform_device_count=8`` the sharded path is
+bit-compatible modulo f32 summation order with the single-device
+``fused_xla`` tier, which is exactly what tests/test_multidevice.py pins.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # graduated API (jax >= 0.5)
+    from jax import shard_map
+except ImportError:  # this image's jax 0.4.x only has the experimental path
+    from jax.experimental.shard_map import shard_map
+
+from repro.core.lattice import Lattice
+
+Array = jax.Array
+
+
+def data_mesh(num_devices: int | None = None,
+              axis_name: str = "data") -> Mesh:
+    """1-D device mesh over (a prefix of) the available devices."""
+    devs = jax.devices()
+    if num_devices is not None:
+        devs = devs[:num_devices]
+    return Mesh(np.array(devs), (axis_name,))
+
+
+def check_shardable(n: int, mesh: Mesh, axis_name: str) -> int:
+    """Points-per-device, or a clear error when n does not divide."""
+    ndev = int(mesh.shape[axis_name])
+    if n % ndev:
+        raise ValueError(
+            f"sharded lattice MVM needs n divisible by the '{axis_name}' "
+            f"axis size: n={n}, devices={ndev}. Pad or subset the point "
+            "set (the lattice build is global either way).")
+    return n // ndev
+
+
+def sharded_lattice_mvm(lat: Lattice, v: Array, weights: Array | None = None,
+                        *, mesh: Mesh, axis_name: str = "data",
+                        taps: tuple[float, ...] | None = None,
+                        symmetrize: bool = True,
+                        transpose: bool = False) -> Array:
+    """W B W^T v with rows of ``v`` sharded over ``mesh``; one psum total.
+
+    Semantically identical to the single-device ``kernels.blur.ops``
+    backends (same linear operator; summation order differs only across
+    device boundaries, so results agree to f32 accumulation noise).
+    ``weights`` may be traced (the sharded path is pure XLA).
+    """
+    if weights is None:
+        if taps is None:
+            raise ValueError("sharded_lattice_mvm needs weights= or taps=")
+        weights = jnp.asarray(taps, v.dtype)
+    n, c = v.shape
+    if n != lat.n:
+        raise ValueError(f"v has {n} rows but the lattice was built for "
+                         f"{lat.n} points")
+    check_shardable(n, mesh, axis_name)
+    d1 = lat.d + 1
+    r = lat.r
+    cap = lat.cap
+    # (n, d+1) layout so the per-point leading axis is the sharded one.
+    seg = lat.seg_ids.reshape(lat.n, d1)
+
+    def local_mvm(v_loc, seg_loc, bw_loc, nbr, w):
+        nl = v_loc.shape[0]
+        seg_flat = seg_loc.reshape(nl * d1)
+        # --- splat (local) + the ONE collective --------------------------
+        contrib = (bw_loc[:, :, None] * v_loc[:, None, :]).reshape(
+            nl * d1, c)
+        table = jax.ops.segment_sum(contrib, seg_flat, num_segments=cap + 1)
+        table = jax.lax.psum(table, axis_name)
+        table = table.at[cap].set(0.0)
+
+        # --- blur (replicated on the summed table) -----------------------
+        w_off = jnp.concatenate([w[:r], w[r + 1:]])  # (2r,) off-center taps
+
+        def blur_dir(vals, a):
+            out = vals * w[r] + jnp.einsum("prc,r->pc", vals[nbr[a]], w_off)
+            return out.at[cap].set(0.0), None
+
+        order = jnp.arange(d1)
+        fwd = order[::-1] if transpose else order
+        blurred, _ = jax.lax.scan(blur_dir, table, fwd)
+        if symmetrize:  # 0.5 (F + F^T): same summed table, opposite sweep
+            blurred_r, _ = jax.lax.scan(blur_dir, table, fwd[::-1])
+            blurred = 0.5 * (blurred + blurred_r)
+
+        # --- slice (local) ----------------------------------------------
+        per_vertex = blurred[seg_flat].reshape(nl, d1, c)
+        return jnp.einsum("nkc,nk->nc", per_vertex, bw_loc)
+
+    fn = shard_map(
+        local_mvm, mesh=mesh,
+        in_specs=(P(axis_name, None), P(axis_name, None),
+                  P(axis_name, None), P(), P()),
+        out_specs=P(axis_name, None))
+    return fn(v, seg, lat.weights, lat.nbr, weights.astype(v.dtype))
+
+
+# NOTE: there is deliberately no sharded twin of ``filtering.mvm_operator``
+# here — pass ``mesh=`` to it (or to ``SimplexGP.operator``) and its matvec
+# dispatches to ``sharded_lattice_mvm`` while keeping the cache/auto-cap
+# machinery of DESIGN.md §9.
+
+
+# ---------------------------------------------------------------------------
+# Collective-count inspection (the one-psum contract).
+# ---------------------------------------------------------------------------
+
+COLLECTIVE_PRIMITIVES = ("psum", "all_gather", "all_to_all", "ppermute",
+                         "psum_scatter")
+
+# inside shard_map bodies jax names the reduction primitive "psum2"
+# (the positional-semantics variant); count it as a psum — it IS the
+# cross-device all-reduce. "pbroadcast" is replication bookkeeping with
+# no communication and is deliberately not counted.
+_PRIMITIVE_ALIASES = {"psum2": "psum"}
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of primitive ``name`` in a (closed) jaxpr, recursively
+    descending into sub-jaxprs (scan/while bodies, shard_map, pjit)."""
+    core_jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    total = 0
+    for eqn in core_jaxpr.eqns:
+        if _PRIMITIVE_ALIASES.get(eqn.primitive.name,
+                                  eqn.primitive.name) == name:
+            total += 1
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                    v, is_leaf=lambda x: isinstance(
+                        x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                if isinstance(sub, (jax.core.Jaxpr, jax.core.ClosedJaxpr)):
+                    total += count_primitive(sub, name)
+    return total
+
+
+def collective_counts(fn, *args) -> dict[str, int]:
+    """{primitive: count} over ``COLLECTIVE_PRIMITIVES`` for ``fn(*args)``."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return {p: count_primitive(jaxpr, p) for p in COLLECTIVE_PRIMITIVES}

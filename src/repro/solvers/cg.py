@@ -51,6 +51,14 @@ def cg(
 ) -> tuple[Array, CGInfo]:
     """Preconditioned CG on SPD ``A`` for a block of RHS columns.
 
+    Multi-RHS contract: the whole block advances together — each
+    iteration issues exactly ONE ``matvec`` on the full (n, k) block
+    (never one per column), so with a lattice operator every iteration
+    costs one batched lattice MVM regardless of how many probes ride
+    along. ``kernels.blur.ops.mvm_count``/``mvm_cols`` instrument this
+    (tests/test_solvers.py pins it); sharded operators (DESIGN.md §10)
+    then also pay one psum per iteration, not k.
+
     Args:
       matvec: ``v -> A v`` over (n, k) blocks.
       b: (n, k) right-hand sides.

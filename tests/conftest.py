@@ -1,13 +1,49 @@
+import json
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here — tests must see the 1 real CPU device.
-# Sharded-execution tests spawn subprocesses with their own flags.
+# Multi-device tests (marker ``multidevice``) run their sharded half in a
+# subprocess whose environment carries MULTIDEVICE_XLA_FLAGS; the
+# ``multidevice_run`` fixture below is the lane's entry point. That keeps
+# the 8 virtual CPU devices OUT of this process (XLA reads the flag once,
+# at backend init) while the lane still runs inside tier-1 on any host.
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+MULTIDEVICE_DEVICES = 8
+MULTIDEVICE_XLA_FLAGS = (
+    f"--xla_force_host_platform_device_count={MULTIDEVICE_DEVICES}")
 
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def multidevice_run():
+    """Run a python snippet under 8 virtual CPU devices; return its JSON.
+
+    The snippet must print a single JSON object as its last stdout line.
+    Existing XLA_FLAGS are preserved (the device-count flag is appended).
+    """
+
+    def run(code: str, timeout: int = 600) -> dict:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " "
+                            + MULTIDEVICE_XLA_FLAGS).strip()
+        extra = env.get("PYTHONPATH")
+        env["PYTHONPATH"] = SRC + (os.pathsep + extra if extra else "")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=timeout)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return json.loads(out.stdout.strip().splitlines()[-1])
+
+    return run
 
 
 def pytest_addoption(parser):

@@ -283,6 +283,38 @@ def test_lattice_cache_reuses_builds(rng):
     assert l4 is not l1
 
 
+def test_lattice_cache_keys_on_sharding_layout(rng):
+    """Regression (PR 3): the cache fingerprint includes the device/
+    sharding layout, so a lattice built from a mesh-sharded ``z`` never
+    aliases the unsharded build of the same bytes (the built arrays
+    inherit z's placement — serving the wrong one silently resharded
+    every MVM)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    x, _ = _data(rng, 64, 2)
+    st = make_stencil("rbf", 1)
+    cache = filtering.LatticeCache()
+    tag = cache.point_set_tag(x)
+    ls = jnp.ones((2,), jnp.float32)
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    x_sharded = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+    assert cache.point_set_tag(x_sharded) == tag  # same bytes, same tag
+    assert (cache.layout_key(x_sharded) != cache.layout_key(x))
+
+    l1 = cache.get(tag, x, spacing=st.spacing, r=st.r, cap=None, ls=ls)
+    l2 = cache.get(tag, x_sharded, spacing=st.spacing, r=st.r, cap=None,
+                   ls=ls)
+    assert l2 is not l1  # layout differs -> distinct cache entries
+    assert cache.misses == 2 and cache.hits == 0
+    # and each layout still hits its own entry
+    assert cache.get(tag, x, spacing=st.spacing, r=st.r, cap=None,
+                     ls=ls) is l1
+    assert cache.get(tag, x_sharded, spacing=st.spacing, r=st.r, cap=None,
+                     ls=ls) is l2
+    assert cache.hits == 2
+
+
 def test_mvm_operator_auto_cap_and_backends(rng):
     """auto_cap right-sizes the table; fused backend matches the default."""
     from repro.core.lattice import default_capacity, suggest_capacity

@@ -1,0 +1,155 @@
+"""Finite-difference gradcheck for the §4.2 custom VJP.
+
+Central differences pin down what the existing algebraic tests
+(tests/test_filtering.py) cannot: that the implemented cotangents agree
+with NUMERICAL derivatives, not merely with each other.
+
+  * w.r.t. values v: ``lattice_filter`` is linear in v, so central
+    differences of the lattice function itself are exact to f32 roundoff
+    — a tight check of the transpose-filter cotangent.
+  * w.r.t. lengthscale: the §4.2 gradient is, by construction, an
+    approximation of the EXACT kernel MVM's gradient (it deliberately
+    ignores the integer rounding), so the oracle is central differences
+    of the DENSE quad form a^T K(ls) b — directional agreement within
+    the lattice approximation error, same calibration as the paper's
+    cosine-similarity claims.
+  * ``lattice_filter_with`` (the prebuilt-lattice twin): identical
+    cotangents to ``lattice_filter``, and its lattice cotangent is the
+    symbolic-zero float0 path (integer leaves carry float0, inexact
+    leaves carry zeros).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import filtering, kernels_math as km
+from repro.core.lattice import build_lattice
+from repro.core.stencil import make_stencil
+
+
+def _data(rng, n, d, c=2):
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    return x, v
+
+
+def _central_diff(f, x0, direction, eps):
+    return (f(x0 + eps * direction) - f(x0 - eps * direction)) / (2 * eps)
+
+
+@pytest.mark.parametrize("entry", ["rebuild", "prebuilt"])
+def test_gradcheck_wrt_values(rng, entry):
+    """dL/dv vs central differences: exact (the filter is linear in v)."""
+    n, d, c = 120, 3, 2
+    x, v = _data(rng, n, d, c)
+    s = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    st = make_stencil("matern32", 1)
+    spec = filtering.spec_for(st)
+    w = jnp.asarray(st.weights, jnp.float32)
+    dw = jnp.asarray(st.dweights, jnp.float32)
+    if entry == "rebuild":
+        f = lambda vv: jnp.vdot(s, filtering.lattice_filter(x, vv, w, dw,
+                                                            spec))
+    else:
+        lat = build_lattice(x, spacing=st.spacing, r=st.r)
+        f = lambda vv: jnp.vdot(s, filtering.lattice_filter_with(
+            lat, x, vv, w, dw, spec))
+    grad = jax.grad(f)(v)
+    rng2 = np.random.default_rng(7)
+    for _ in range(4):
+        direction = jnp.asarray(rng2.normal(size=v.shape), jnp.float32)
+        direction = direction / jnp.linalg.norm(direction)
+        fd = float(_central_diff(f, v, direction, eps=1e-2))
+        an = float(jnp.vdot(grad, direction))
+        assert abs(fd - an) <= 1e-3 * max(1.0, abs(an)), (fd, an)
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "matern32"])
+def test_gradcheck_wrt_lengthscale_vs_dense_fd(rng, kernel):
+    """d(a^T K(ls) b)/d(ls) — §4.2 analytic vs central differences of the
+    DENSE oracle quad form, per-ARD-dimension."""
+    n, d, c = 240, 3, 1
+    x, v = _data(rng, n, d, c)
+    a = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    st = make_stencil(kernel, 2)
+    spec = filtering.spec_for(st)
+    w = jnp.asarray(st.weights, jnp.float32)
+    dw = jnp.asarray(st.dweights, jnp.float32)
+    profile = km.get_profile(kernel)
+    ls0 = jnp.asarray([1.1, 0.9, 1.3], jnp.float32)
+
+    def lattice_quad(ls):
+        return jnp.vdot(a, filtering.lattice_filter(x / ls[None, :], v, w,
+                                                    dw, spec))
+
+    def dense_quad(ls):
+        # float64 numpy oracle: K(ls) b without any lattice
+        xs = np.asarray(x, np.float64) / np.asarray(ls, np.float64)[None, :]
+        tau = np.sqrt(np.maximum(
+            ((xs[:, None, :] - xs[None, :, :]) ** 2).sum(-1), 0.0))
+        kmat = np.asarray(profile.k(jnp.asarray(tau)), np.float64)
+        return float(np.vdot(np.asarray(a, np.float64)[:, 0],
+                             kmat @ np.asarray(v, np.float64)[:, 0]))
+
+    grad = jax.grad(lattice_quad)(ls0)
+    fd = np.array([
+        _central_diff(lambda l: dense_quad(jnp.asarray(l, jnp.float32)),
+                      np.asarray(ls0, np.float64), e, eps=1e-3)
+        for e in np.eye(3)])
+    grad = np.asarray(grad, np.float64)
+    cos = float(grad @ fd / (np.linalg.norm(grad) * np.linalg.norm(fd)))
+    assert cos > 0.9, (cos, grad, fd)
+    # magnitudes agree to the lattice approximation level, not just sign
+    assert np.linalg.norm(grad - fd) <= 0.5 * np.linalg.norm(fd), (grad, fd)
+
+
+def test_prebuilt_matches_rebuild_gradients(rng):
+    """lattice_filter_with reproduces lattice_filter's (z, v) cotangents
+    exactly when handed the same lattice."""
+    n, d, c = 100, 2, 2
+    x, v = _data(rng, n, d, c)
+    s = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    st = make_stencil("matern32", 1)
+    spec = filtering.spec_for(st)
+    w = jnp.asarray(st.weights, jnp.float32)
+    dw = jnp.asarray(st.dweights, jnp.float32)
+    lat = build_lattice(x, spacing=st.spacing, r=st.r)
+
+    g1 = jax.grad(lambda z, vv: jnp.vdot(
+        s, filtering.lattice_filter(z, vv, w, dw, spec)), argnums=(0, 1))(
+            x, v)
+    g2 = jax.grad(lambda z, vv: jnp.vdot(
+        s, filtering.lattice_filter_with(lat, z, vv, w, dw, spec)),
+        argnums=(0, 1))(x, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_float0_lattice_cotangent(rng):
+    """The prebuilt lattice's cotangent is symbolically zero: float0 for
+    integer/bool leaves, zero arrays for inexact leaves — so jit/grad
+    compose over the shared-lattice path without touching the rounding."""
+    n, d = 60, 2
+    x, v = _data(rng, n, d, 1)
+    st = make_stencil("rbf", 1)
+    spec = filtering.spec_for(st)
+    w = jnp.asarray(st.weights, jnp.float32)
+    dw = jnp.asarray(st.dweights, jnp.float32)
+    lat = build_lattice(x, spacing=st.spacing, r=st.r)
+
+    out, vjp = jax.vjp(
+        lambda lt, z, vv: filtering.lattice_filter_with(lt, z, vv, w, dw,
+                                                        spec), lat, x, v)
+    dlat, dz, dv = vjp(jnp.ones_like(out))
+    leaves = jax.tree.leaves(dlat)
+    assert leaves, "lattice cotangent should not be empty"
+    for leaf in leaves:
+        if np.asarray(leaf).dtype == jax.dtypes.float0:
+            continue  # symbolic zero for integer leaves — the float0 path
+        assert jnp.issubdtype(jnp.result_type(leaf), jnp.inexact)
+        assert not np.any(np.asarray(leaf))
+    # the real cotangents flow unharmed next to the float0 ones
+    assert float(jnp.linalg.norm(dz)) > 0
+    assert float(jnp.linalg.norm(dv)) > 0

@@ -149,3 +149,51 @@ def test_property_cg_residual_decreases(n, seed):
     b = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
     x, info = cg(lambda v: a @ v, b, tol=1e-5, max_iters=2 * n)
     assert float(info.residual_norms[0]) < 1e-3
+
+
+def test_mbcg_issues_one_batched_mvm_per_iteration(rng):
+    """Multi-RHS operator contract: mBCG with k probe columns advances the
+    whole [y | Z] block through ONE (n, 1+k)-channel lattice MVM per
+    iteration — never one MVM per column. Pinned at trace level with the
+    kernels/blur/ops instrumentation (build_count-style): the CG scan body
+    traces exactly one lattice_mvm call whose channel width is the full
+    block, and the operator build itself traces exactly one more (the
+    initial residual is b, so there is no extra setup MVM)."""
+    from repro.core import filtering
+    from repro.core.stencil import make_stencil
+    from repro.kernels.blur.ops import mvm_cols, mvm_count
+
+    n, d, k = 96, 2, 7
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, 1 + k)), jnp.float32)
+    stn = make_stencil("matern32", 1)
+    matvec, _ = filtering.mvm_operator(x, stn)
+    op = lambda v: matvec(v) + 0.5 * v
+
+    c0, w0 = mvm_count(), mvm_cols()
+    _, info = cg(op, b, tol=1e-2, max_iters=25)
+    calls = mvm_count() - c0
+    cols = mvm_cols() - w0
+    assert calls == 1, calls  # one traced MVM in the scan body
+    assert cols == 1 + k, cols  # ... carrying the WHOLE block
+    assert int(info.iterations) > 1  # and it actually iterated
+
+
+def test_lanczos_block_rides_one_mvm_per_iteration(rng):
+    """Same contract for the Lanczos/LOVE side: a (n, k) start block is
+    tridiagonalized with one batched MVM per iteration."""
+    from repro.core import filtering
+    from repro.core.stencil import make_stencil
+    from repro.kernels.blur.ops import mvm_cols, mvm_count
+
+    n, d, k = 80, 2, 5
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q0 = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    stn = make_stencil("rbf", 1)
+    matvec, _ = filtering.mvm_operator(x, stn)
+
+    c0, w0 = mvm_count(), mvm_cols()
+    res = lanczos(lambda v: matvec(v) + 0.1 * v, q0, 10)
+    assert mvm_count() - c0 == 1
+    assert mvm_cols() - w0 == k
+    assert bool(jnp.all(jnp.isfinite(res.alphas)))
