@@ -12,14 +12,15 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig4_mvm_error, fig6_mvm_speed, fig_scaling,
-                        fig_train_step, roofline_report, table2_uci,
-                        table3_sparsity, table4_cg)
+from benchmarks import (fig4_mvm_error, fig6_mvm_speed, fig_build,
+                        fig_scaling, fig_train_step, roofline_report,
+                        table2_uci, table3_sparsity, table4_cg)
 
 MODULES = {
     "fig4": fig4_mvm_error,
     "table3": table3_sparsity,
     "fig6": fig6_mvm_speed,
+    "fig_build": fig_build,
     "fig_train": fig_train_step,
     "fig_scaling": fig_scaling,
     "table4": table4_cg,

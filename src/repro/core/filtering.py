@@ -60,14 +60,17 @@ class FilterSpec(NamedTuple):
     taps: tuple[float, ...] | None = None  # concrete forward stencil
     dtaps: tuple[float, ...] | None = None  # concrete derivative stencil
     backend: str = "auto"  # kernels/blur/ops.py backend policy
+    build_backend: str = "auto"  # kernels/hash/ops.py build-path policy
 
 
 def spec_for(stencil: Stencil, cap: int | None = None,
-             symmetrize: bool = True, backend: str = "auto") -> FilterSpec:
+             symmetrize: bool = True, backend: str = "auto",
+             build_backend: str = "auto") -> FilterSpec:
     return FilterSpec(spacing=stencil.spacing, r=stencil.r, cap=cap,
                       symmetrize=symmetrize, dscale=stencil.dscale,
                       taps=tuple(stencil.weights),
-                      dtaps=tuple(stencil.dweights), backend=backend)
+                      dtaps=tuple(stencil.dweights), backend=backend,
+                      build_backend=build_backend)
 
 
 def filter_mvm(lat: Lattice, v: Array, weights: Array | None = None, *,
@@ -126,14 +129,14 @@ def lattice_filter(z: Array, v: Array, weights: Array, dweights: Array,
       spec: static filter configuration.
     """
     lat = lat_mod.build_lattice(z, spacing=spec.spacing, r=spec.r,
-                                cap=spec.cap)
+                                cap=spec.cap, backend=spec.build_backend)
     return filter_mvm(lat, v, weights, symmetrize=spec.symmetrize,
                       backend=spec.backend, taps=spec.taps)
 
 
 def _filter_fwd(z, v, weights, dweights, spec):
     lat = lat_mod.build_lattice(z, spacing=spec.spacing, r=spec.r,
-                                cap=spec.cap)
+                                cap=spec.cap, backend=spec.build_backend)
     u = filter_mvm(lat, v, weights, symmetrize=spec.symmetrize,
                    backend=spec.backend, taps=spec.taps)
     return u, (z, v, weights, dweights, lat)
@@ -311,27 +314,42 @@ class LatticeCache:
         return "" if sharding is None else str(sharding)
 
     def get(self, tag, z: Array, *, spacing: float, r: int,
-            cap: int | None, ls=None) -> Lattice:
+            cap: int | None, ls=None,
+            build_backend: str = "auto") -> Lattice:
         """Return a cached lattice for this key, building on miss.
 
         ``tag`` identifies the point set(s) behind ``z`` (use
         ``point_set_tag``); ``ls`` is the concrete lengthscale the embedding
         divided by (traced -> bypass). The key also includes ``z``'s
         device/sharding layout so a sharded build never aliases an
-        unsharded one.
+        unsharded one, and the build path (sort vs hash slot numbering
+        differs, so lattices from different backends must never alias
+        either — consumers may hold slot-indexed state).
         """
         ls_key = concrete_ls_key(ls) if ls is not None else ()
         if tag is None or ls_key is None or isinstance(z, jax.core.Tracer):
-            return lat_mod.build_lattice(z, spacing=spacing, r=r, cap=cap)
+            return lat_mod.build_lattice(z, spacing=spacing, r=r, cap=cap,
+                                         backend=build_backend)
+        # key on the RESOLVED backend (what build_lattice will actually
+        # run), so "auto" and its explicit resolution share one entry —
+        # and the key matches the stored Lattice.build_backend provenance
+        from repro.kernels.hash import ops as hash_ops
+        n, d = z.shape
+        cap_val = cap if cap is not None else lat_mod.default_capacity(n, d)
+        resolved = hash_ops.resolve_build_backend(
+            build_backend, hcap=hash_ops.hash_capacity(cap_val),
+            npk=max(1, (d + 1) // 2))
         key = (tag, ls_key, float(spacing), int(r),
-               None if cap is None else int(cap), self.layout_key(z))
+               None if cap is None else int(cap), self.layout_key(z),
+               resolved)
         hit = self._store.get(key)
         if hit is not None:
             self._store.move_to_end(key)
             self.hits += 1
             return hit
         self.misses += 1
-        lat = lat_mod.build_lattice(z, spacing=spacing, r=r, cap=cap)
+        lat = lat_mod.build_lattice(z, spacing=spacing, r=r, cap=cap,
+                                    backend=resolved)
         self._store[key] = lat
         while len(self._store) > self._maxsize:
             self._store.popitem(last=False)
@@ -340,6 +358,7 @@ class LatticeCache:
 
 def mvm_operator(z: Array, stencil: Stencil, *, cap: int | None = None,
                  symmetrize: bool = True, backend: str = "auto",
+                 build_backend: str = "auto",
                  auto_cap: bool = False, mesh=None,
                  axis_name: str = "data"):
     """Build the lattice once and return (matvec, lattice).
@@ -356,10 +375,10 @@ def mvm_operator(z: Array, stencil: Stencil, *, cap: int | None = None,
     """
     if auto_cap and cap is None:
         lat = lat_mod.build_lattice_auto(z, spacing=stencil.spacing,
-                                         r=stencil.r)
+                                         r=stencil.r, backend=build_backend)
     else:
         lat = lat_mod.build_lattice(z, spacing=stencil.spacing, r=stencil.r,
-                                    cap=cap)
+                                    cap=cap, backend=build_backend)
     w = jnp.asarray(stencil.weights, dtype=z.dtype)
     taps = tuple(stencil.weights)
 

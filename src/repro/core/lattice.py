@@ -6,14 +6,23 @@ allocation nor atomics, so this module re-derives the lattice with
 static-shape primitives (see DESIGN.md §2):
 
   * every input emits the ``d+1`` vertex keys of its enclosing simplex;
-  * keys are deduplicated with an exact lexicographic ``lax.sort`` (no hash,
-    no collisions, deterministic) into a fixed-capacity table;
-  * blur neighbors are resolved ONCE at build time by a second merge-sort
-    lookup, producing a dense ``(d+1, cap, 2r)`` int32 gather table;
+  * keys are deduplicated into a fixed-capacity table, and blur neighbors
+    are resolved ONCE at build time into a dense ``(d+1, cap, 2r)`` int32
+    gather table — by one of two interchangeable build paths:
+      - ``sort``: exact lexicographic ``lax.sort`` dedup + a merge-sort
+        neighbor lookup (deterministic lex slot order; the oracle path);
+      - ``hash`` (the default; DESIGN.md §11): a static-capacity
+        open-addressing hash table (kernels/hash) — epoch-based
+        scatter-min insert for dedup, gather-only probe lookup for
+        neighbors — the CUDA design recovered without atomics, 2-5x
+        faster per build on the host backend (BENCH_build.json);
   * splat is a ``segment_sum``, blur is ``gather + stencil reduction``,
     slice is ``take + barycentric contraction``.
 
-All shapes depend only on ``(n, d, r, cap)`` so the whole build is jittable.
+Both paths produce operator-equivalent ``Lattice`` structures (same
+deduplicated point set, seg structure, neighbor graph, and overflow
+semantics) differing only in slot numbering. All shapes depend only on
+``(n, d, r, cap)`` so the whole build is jittable.
 A build is only required when the *integer* lattice geometry changes — i.e.
 when the lengthscale/spacing moves enough to change the rounding of inputs
 to simplex vertices — which in practice means once per hyperparameter
@@ -41,6 +50,8 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.hash import ops as hash_ops
 
 Array = jax.Array
 
@@ -158,6 +169,12 @@ class Lattice:
     r: int = dataclasses.field(metadata=dict(static=True))
     cap: int = dataclasses.field(metadata=dict(static=True))
     n: int = dataclasses.field(metadata=dict(static=True))
+    # which build path produced this lattice ("sort" / "hash_xla" /
+    # "hash_pallas"). Slot NUMBERING differs between paths (lex order vs
+    # hash placement) while the operator is equivalent; caches must key on
+    # it so lattices from different paths never alias.
+    build_backend: str = dataclasses.field(default="sort",
+                                           metadata=dict(static=True))
 
 
 def _lex_sort(cols: Sequence[Array], payloads: Sequence[Array]):
@@ -237,7 +254,8 @@ def default_capacity(n: int, d: int) -> int:
     return n * (d + 1)
 
 
-def suggest_capacity(n: int, d: int, spacing: float) -> int:
+def suggest_capacity(n: int, d: int, spacing: float, *, r: int = 1,
+                     c: int = 1, vmem_aware: bool = True) -> int:
     """Heuristic starting capacity for grow-and-retry builds.
 
     The worst case m = n (d+1) is wildly pessimistic for real data (paper
@@ -247,28 +265,46 @@ def suggest_capacity(n: int, d: int, spacing: float) -> int:
     VMEM. Start from a constant-occupancy guess (wider stencil spacing means
     coarser cells, hence fewer of them), round up to a power of two, and let
     ``build_lattice_auto`` grow on overflow.
+
+    ``vmem_aware`` guards the power-of-two rounding against silently
+    defeating ``kernels.blur.ops.fits_vmem``: when the raw guess fits the
+    fused MVM's VMEM plan (for ``r`` and ``c`` channels) but the rounded
+    cap does not, the suggestion is clamped to the largest fitting cap
+    instead of spilling the fusion. A guess that does not fit even
+    unrounded is returned as-is — occupancy beats fusion (the blocked/XLA
+    tiers handle oversized tables; under-capacity would corrupt results).
     """
     guess = max(1024, int(n * (d + 1) / (8.0 * max(spacing, 0.25))))
     # round up to a power of two, but never past the provable worst case
-    return min(1 << (guess - 1).bit_length(), default_capacity(n, d))
+    cap = min(1 << (guess - 1).bit_length(), default_capacity(n, d))
+    if vmem_aware:
+        from repro.kernels.blur import ops as blur_ops  # cycle-safe: lazy
+        if blur_ops.fits_vmem(n, d, r, guess + 1, c) and \
+                not blur_ops.fits_vmem(n, d, r, cap + 1, c):
+            cap = max(guess, min(cap, blur_ops.max_cap_for_vmem(n, d, r, c)))
+    return min(cap, default_capacity(n, d))
 
 
 def build_lattice_auto(z: Array, *, spacing: float, r: int = 1,
                        cap: int | None = None, growth: int = 4,
-                       max_tries: int = 6) -> "Lattice":
+                       max_tries: int = 6,
+                       backend: str = "auto") -> "Lattice":
     """Grow-and-retry wrapper: start at ``suggest_capacity`` and multiply by
     ``growth`` until the table fits (overflow flag clear).
 
     Syncs on the overflow flag, so call it OUTSIDE jit (amortized: once per
     hyperparameter setting). Inside jit, use ``build_lattice`` with a static
-    cap as before.
+    cap as before. ``backend`` selects the build path (see
+    ``build_lattice``); the overflow/grow contract is identical across
+    paths.
     """
     n, d = z.shape
     worst = default_capacity(n, d)
     if cap is None:
-        cap = suggest_capacity(n, d, spacing)
+        cap = suggest_capacity(n, d, spacing, r=r)
     for _ in range(max_tries):
-        lat = build_lattice(z, spacing=spacing, r=r, cap=min(cap, worst))
+        lat = build_lattice(z, spacing=spacing, r=r, cap=min(cap, worst),
+                            backend=backend)
         if bool(lat.pack_overflow):
             # coordinate range, not capacity: growth cannot help — return
             # with the overflow flag set so the caller sees invalid results
@@ -280,7 +316,7 @@ def build_lattice_auto(z: Array, *, spacing: float, r: int = 1,
 
 
 def build_lattice(z: Array, *, spacing: float, r: int = 1,
-                  cap: int | None = None) -> Lattice:
+                  cap: int | None = None, backend: str = "auto") -> Lattice:
     """Construct the lattice for (already lengthscale-normalized) inputs.
 
     Args:
@@ -290,12 +326,24 @@ def build_lattice(z: Array, *, spacing: float, r: int = 1,
       cap: static table capacity; defaults to the worst case n*(d+1).
         Prefer an auto-sized cap (``build_lattice_auto`` outside jit) — every
         per-lattice-point array scales with it.
+      backend: build path (kernels/hash/ops.py policy). "auto" resolves to
+        the hash build (hash_pallas on TPU when the table fits VMEM,
+        hash_xla elsewhere); "sort" keeps the original two-pass
+        lexicographic-sort build as the bit-exact lex-ordered oracle. All
+        paths produce operator-equivalent lattices (same splat->blur->slice
+        results up to slot permutation + f32 accumulation noise) with
+        identical overflow/pack_overflow semantics.
     """
     n, d = z.shape
     if cap is None:
         cap = default_capacity(n, d)
     _BUILD_STATS["builds"] += 1
-    return _build_lattice_impl(z, spacing=spacing, r=r, cap=cap)
+    resolved = hash_ops.resolve_build_backend(
+        backend, hcap=hash_ops.hash_capacity(cap), npk=max(1, (d + 1) // 2))
+    if resolved == "sort":
+        return _build_lattice_impl(z, spacing=spacing, r=r, cap=cap)
+    return _build_lattice_hash_impl(z, spacing=spacing, r=r, cap=cap,
+                                    backend=resolved)
 
 
 @functools.partial(jax.jit, static_argnames=("r", "cap"))
@@ -351,6 +399,34 @@ def _build_lattice_impl(z: Array, *, spacing: float, r: int,
                    n=n)
 
 
+def _neighbor_queries(coords: Array, valid: Array, *, d: int, r: int,
+                      cap: int):
+    """Packed ``±1..±r`` neighbor-query keys for every (direction, slot).
+
+    Shared by BOTH build paths (sort merge-lookup and hash lookup) and by
+    the build benchmark's phase breakdown, so the query grid — offsets,
+    flattening order, validity masking — can never desynchronize between
+    the oracle and the fast path. Returns:
+      q_packed:  ((d+1)(cap+1)(2r), npk) int32 packed query keys;
+      src_valid: same leading shape, bool — whether the SOURCE slot of
+        each query is a valid lattice point (invalid sources must miss).
+    """
+    # offsets along direction a: -1 everywhere, +d at coordinate a
+    eye = jnp.eye(d + 1, dtype=jnp.int32)
+    dirs = (d + 1) * eye - 1  # (d+1, d+1): dirs[a] = offset of +1 step along a
+
+    steps = jnp.concatenate([jnp.arange(-r, 0), jnp.arange(1, r + 1)])  # (2r,)
+    # queries[a, p, s] = coords[p] + steps[s] * dirs[a]
+    table = coords[: cap + 1]  # includes dump row; masked via src_valid
+    q = (table[None, :, None, :]
+         + steps[None, None, :, None] * dirs[:, None, None, :])  # (d+1, cap+1, 2r, d+1)
+    nq = (d + 1) * (cap + 1) * (2 * r)
+    q_packed = jnp.stack(_pack_key_cols(q.reshape(nq, d + 1)), axis=1)
+    src_valid = jnp.repeat(valid[: cap + 1], 2 * r)  # reshape order per a
+    src_valid = jnp.tile(src_valid, d + 1)
+    return q_packed, src_valid
+
+
 def _neighbor_table(coords: Array, valid: Array, *, d: int, r: int,
                     cap: int) -> Array:
     """Resolve, for each lattice point and direction, the slots of its
@@ -360,23 +436,10 @@ def _neighbor_table(coords: Array, valid: Array, *, d: int, r: int,
     lex-sort by (coords..., tag); every query's match, if present, is the
     closest preceding tag-0 entry with identical coordinates.
     """
-    # offsets along direction a: -1 everywhere, +d at coordinate a
-    eye = jnp.eye(d + 1, dtype=jnp.int32)
-    dirs = (d + 1) * eye - 1  # (d+1, d+1): dirs[a] = offset of +1 step along a
-
-    steps = jnp.concatenate([jnp.arange(-r, 0), jnp.arange(1, r + 1)])  # (2r,)
-    # queries[a, p, s] = coords[p] + steps[s] * dirs[a]
-    table = coords[: cap + 1]  # includes dump row; masked below
-    q = (table[None, :, None, :]
-         + steps[None, None, :, None] * dirs[:, None, None, :])  # (d+1, cap+1, 2r, d+1)
-    nq = (d + 1) * (cap + 1) * (2 * r)
-    q = q.reshape(nq, d + 1)
-
-    # pack keys (C1); invalid sources/entries get out-of-band packed cols
-    q_packed = jnp.stack(_pack_key_cols(q), axis=1)
-    t_packed = jnp.stack(_pack_key_cols(table), axis=1)
-    src_valid = jnp.repeat(valid[: cap + 1], 2 * r)  # reshape order per a
-    src_valid = jnp.tile(src_valid, d + 1)
+    q_packed, src_valid = _neighbor_queries(coords, valid, d=d, r=r, cap=cap)
+    nq = q_packed.shape[0]
+    t_packed = jnp.stack(_pack_key_cols(coords[: cap + 1]), axis=1)
+    # invalid sources/entries get out-of-band packed cols
     q_packed = jnp.where(src_valid[:, None], q_packed, INT_SENTINEL_B)
     t_packed = jnp.where(valid[:, None], t_packed, INT_SENTINEL_A)
 
@@ -412,6 +475,102 @@ def _neighbor_table(coords: Array, valid: Array, *, d: int, r: int,
         jnp.where(is_q, spayload, nq)
     ].set(matched_slot, mode="drop")
     return out.reshape(d + 1, cap + 1, 2 * r)
+
+
+# ---------------------------------------------------------------------------
+# Hash-based build (DESIGN.md §11): same Lattice, no lexicographic sorts.
+# ---------------------------------------------------------------------------
+
+
+def _splat_plan_sort(seg_ids: Array, *, big: int, cap: int):
+    """Sort contributions by slot for the §8 splat plan -> (seg_sorted, perm).
+
+    The hash insert has no sorted order, so the plan comes from ONE
+    single-column sort of ``(slot << bits(N)) | row`` — grouping by slot
+    with row order preserved inside each group, the same intra-slot order
+    as the stable dedup sort, so splat results match bit-for-bit up to
+    the segmented scan's global-order f32 noise. Caps too large for the
+    fused int32 key fall back to a two-array single-key sort. Shared with
+    the build benchmark's phase breakdown so it times the variant the
+    build actually runs.
+    """
+    nb = max(1, (big - 1).bit_length())
+    if int(cap).bit_length() + nb <= 31:  # fused single-column key fits
+        comb = (seg_ids << nb) | jnp.arange(big, dtype=jnp.int32)
+        (scomb,) = jax.lax.sort((comb,), num_keys=1)
+        return scomb >> nb, scomb & ((1 << nb) - 1)
+    # huge worst-case caps: plain (key, payload) single-key sort
+    return jax.lax.sort((seg_ids, jnp.arange(big, dtype=jnp.int32)),
+                        num_keys=1)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "cap", "backend"))
+def _build_lattice_hash_impl(z: Array, *, spacing: float, r: int, cap: int,
+                             backend: str) -> Lattice:
+    """Open-addressing build: insert for dedup, lookup for neighbors.
+
+    Replaces both ``_lex_sort`` passes of ``_build_lattice_impl`` with the
+    kernels/hash table — O(n d · probes) with near-constant probes at
+    <= 0.5 occupancy — and derives the sorted splat plan from ONE cheap
+    single-column sort (slot << bits | row) instead of the multi-column
+    key sort. Produces an operator-equivalent ``Lattice``: identical
+    deduplicated point set, seg structure, neighbor graph, and
+    overflow/pack_overflow semantics; only the slot NUMBERING (hash
+    placement vs lex order) differs.
+    """
+    n, d = z.shape
+    keys, weights = simplex_embed(z, spacing)  # (n, d+1, d+1), (n, d+1)
+    big = n * (d + 1)
+    flat = keys.reshape(big, d + 1)
+    packed = jnp.stack(_pack_key_cols(flat), axis=1)  # (big, npk)
+    hcap = hash_ops.hash_capacity(cap)
+
+    # ---- dedup via hash insert --------------------------------------------
+    owner, slot_row, row_ok = hash_ops.hash_insert(packed, hcap,
+                                                   backend=backend)
+    occ = owner < big  # occupied hash slots (owner row id < N, EMPTY == N)
+    m = jnp.sum(occ.astype(jnp.int32))
+    dense = jnp.cumsum(occ.astype(jnp.int32)) - 1  # hash slot -> dense id
+    dense_of = jnp.where(occ, jnp.minimum(dense, cap), cap)
+    tkeys = hash_ops.table_keys(owner, packed)  # (hcap, npk), empty -> SENT
+    pack_ovf = _pack_overflow(flat)
+    overflow = (m > cap) | ~jnp.all(row_ok) | pack_ovf
+
+    # per-(input, vertex) slot ids, already in original order (no perm)
+    seg_ids = jnp.where(row_ok, dense_of[slot_row], cap)
+
+    # dense lattice-point table (scatter over hcap rows only — cheap)
+    dense_clip = jnp.where(occ & (dense < cap), dense, cap)
+    coords = jnp.zeros((cap + 1, d + 1), jnp.int32).at[dense_clip].set(
+        jnp.where(occ[:, None], _unpack_key_cols(tkeys, d + 1), 0))
+    valid = jnp.zeros((cap + 1,), bool).at[dense_clip].set(occ)
+    valid = valid.at[cap].set(False)
+
+    # ---- sorted splat plan (DESIGN.md §8) ----------------------------------
+    seg_sorted, perm = _splat_plan_sort(seg_ids, big=big, cap=cap)
+    sort_row = perm // (d + 1)
+    sort_w = weights.reshape(big)[perm]
+    seg_head = jnp.concatenate([jnp.ones((1,), bool),
+                                seg_sorted[1:] != seg_sorted[:-1]])
+    # last sorted index per slot via binary search (no scatter): seg_sorted
+    # is sorted, so right-boundary - 1 is each slot's last member
+    row_last = jnp.clip(
+        jnp.searchsorted(seg_sorted, jnp.arange(cap + 1, dtype=jnp.int32),
+                         side="right").astype(jnp.int32) - 1, 0, big - 1)
+
+    # ---- blur neighbor table via hash lookup -------------------------------
+    q_packed, src_valid = _neighbor_queries(coords, valid, d=d, r=r, cap=cap)
+    hres = hash_ops.hash_lookup(tkeys, q_packed, src_valid, hcap,
+                                backend=backend)
+    nbr = jnp.where(src_valid & (hres >= 0),
+                    dense_of[jnp.clip(hres, 0, hcap - 1)],
+                    cap).reshape(d + 1, cap + 1, 2 * r)
+
+    return Lattice(coords=coords, valid=valid, m=m, seg_ids=seg_ids,
+                   weights=weights, nbr=nbr, overflow=overflow,
+                   pack_overflow=pack_ovf, sort_row=sort_row, sort_w=sort_w,
+                   seg_head=seg_head, row_last=row_last, d=d, r=r, cap=cap,
+                   n=n, build_backend=backend)
 
 
 # ---------------------------------------------------------------------------

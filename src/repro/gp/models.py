@@ -68,6 +68,11 @@ class SimplexGPConfig:
     # "auto" picks fused_pallas/per_direction_pallas on TPU by VMEM fit and
     # the fused single-jit XLA path elsewhere.
     backend: str = "auto"
+    # lattice BUILD path (kernels/hash/ops.py policy; DESIGN.md §11):
+    # "auto" resolves to the open-addressing hash build (hash_pallas on
+    # TPU when the key table fits VMEM, hash_xla elsewhere); "sort" keeps
+    # the original lexicographic-sort build as the bit-exact oracle.
+    build_backend: str = "auto"
     precond_rank: int = 0  # 0 = no preconditioner (lattice MVMs are cheap)
     num_probes: int = 8
     max_lanczos_iters: int = 50
@@ -154,9 +159,11 @@ class SimplexGP:
             cap = self.capacity(*x.shape) if cap is None else cap
             if cache is not None:
                 lat = cache.get(cache.point_set_tag(x), z,
-                                spacing=st.spacing, r=st.r, cap=cap, ls=ls)
+                                spacing=st.spacing, r=st.r, cap=cap, ls=ls,
+                                build_backend=cfg.build_backend)
             else:
-                lat = build_lattice(z, spacing=st.spacing, r=st.r, cap=cap)
+                lat = build_lattice(z, spacing=st.spacing, r=st.r, cap=cap,
+                                    backend=cfg.build_backend)
         w = jnp.asarray(st.weights, x.dtype)
         taps = tuple(st.weights)
 
@@ -197,7 +204,8 @@ class SimplexGP:
             cap = lat.cap if lat is not None else self.capacity(*x.shape)
             spec = filtering.spec_for(st, cap=cap,
                                       symmetrize=cfg.symmetrize,
-                                      backend=cfg.backend)
+                                      backend=cfg.backend,
+                                      build_backend=cfg.build_backend)
             if lat is not None:
                 kb = os_ * filtering.lattice_filter_with(lat, z, b, w, dw,
                                                          spec)
@@ -205,7 +213,8 @@ class SimplexGP:
                 kb = os_ * filtering.lattice_filter(z, b, w, dw, spec)
         else:  # autodiff through the barycentric interpolation (a.e. exact)
             lat = build_lattice(z, spacing=st.spacing, r=st.r,
-                                cap=self.capacity(*x.shape))
+                                cap=self.capacity(*x.shape),
+                                backend=cfg.build_backend)
             # Pallas kernels have no VJP; keep autodiff on the fused XLA
             # tier even when the config would pick a Pallas backend.
             bk = cfg.backend if cfg.backend in ("fused_xla", "xla") \

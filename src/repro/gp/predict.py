@@ -57,8 +57,10 @@ def _joint_lattice(model: SimplexGP, params: GPParams, x: Array, xs: Array,
     cap = model.capacity(n + ns, x.shape[1]) if cap is None else cap
     if cache is not None:
         return cache.get(cache.point_set_tag(x, xs), zj,
-                         spacing=st.spacing, r=st.r, cap=cap, ls=ls)
-    return build_lattice(zj, spacing=st.spacing, r=st.r, cap=cap)
+                         spacing=st.spacing, r=st.r, cap=cap, ls=ls,
+                         build_backend=model.config.build_backend)
+    return build_lattice(zj, spacing=st.spacing, r=st.r, cap=cap,
+                         backend=model.config.build_backend)
 
 
 def _joint_filter(model: SimplexGP, lat: Lattice, v: Array,

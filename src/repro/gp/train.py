@@ -53,7 +53,8 @@ def _auto_cap(model: SimplexGP, params: GPParams, x: Array, *,
     """
     st = model.stencil
     ls = model.constrained(params)[0]
-    lat = build_lattice_auto(x / ls[None, :], spacing=st.spacing, r=st.r)
+    lat = build_lattice_auto(x / ls[None, :], spacing=st.spacing, r=st.r,
+                             backend=model.config.build_backend)
     worst = default_capacity(*x.shape)
     return min(max(lat.cap * headroom, 1024), worst)
 

@@ -84,6 +84,23 @@ def table_fits_vmem(cap1: int, c: int, itemsize: int = 4) -> bool:
     return cap1 * c * itemsize <= _TABLE_BUDGET_BYTES
 
 
+def max_cap_for_vmem(n: int, d: int, r: int, c: int, *,
+                     budget: int = VMEM_BUDGET_BYTES,
+                     itemsize: int = 4) -> int:
+    """Largest table capacity whose fused-kernel memory plan fits ``budget``.
+
+    Inverts ``fused_vmem_bytes`` (linear in cap1). 0 when even an empty
+    table spills — the fixed per-point residents alone exceed the budget.
+    Used by ``lattice.suggest_capacity`` to keep its power-of-two rounding
+    from silently defeating ``fits_vmem``.
+    """
+    big = n * (d + 1)
+    fixed_words = big * (c + 3) + 2 * big + 2 * n * c
+    per_cap1_words = 3 * c + 4 * r + 2
+    cap1 = (budget // itemsize - fixed_words) // per_cap1_words
+    return max(int(cap1) - 1, 0)
+
+
 def pick_block_p(cap1: int, c: int = 1) -> int:
     """Heuristic block_p: large enough to amortize per-step overhead, small
     enough that a handful of tiles fit next to the resident table. Override

@@ -25,6 +25,16 @@ One-psum-per-MVM is a hard contract: ``count_primitive`` below lets tests
 and benchmarks assert it on the jaxpr (``symmetrize`` reuses the same
 summed table for both sweep orders, so it adds no collective).
 
+Build-backend interplay (DESIGN.md §11): the sharded MVM is agnostic to
+which build path produced the ``Lattice`` — ``seg_ids`` carry *global*
+slot ids and the blur graph is a dense gather table under every backend
+(sort's lex numbering vs the hash build's placement numbering are related
+by a pure slot permutation, which the replicated table absorbs). What
+must NOT happen is mixing lattices across paths for the same point set:
+consumers holding slot-indexed state (the replicated ``nbr`` table, LOVE
+caches) would silently mix numberings — ``LatticeCache`` therefore keys
+on the build backend alongside the device/sharding layout.
+
 Everything is plain XLA inside ``shard_map`` — on CPU hosts with
 ``--xla_force_host_platform_device_count=8`` the sharded path is
 bit-compatible modulo f32 summation order with the single-device

@@ -7,6 +7,9 @@ pipeline regression (extra rebuilds, broken fused dispatch, NaNs from the
 CG-reused log-det) fails here instead of only showing up in
 ``benchmarks/fig_train_step.py``.
 """
+import os
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +18,9 @@ import pytest
 from repro.core.lattice import build_count
 from repro.gp import (GPParams, SimplexGP, SimplexGPConfig,
                       mll_value_and_grad, posterior)
+
+# the benchmarks package lives at the repo root (not under src/)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 @pytest.mark.bench_smoke
@@ -55,3 +61,27 @@ def test_posterior_smoke(rng):
     assert bool(jnp.all(jnp.isfinite(post.mean)))
     assert bool(jnp.all(post.var > 0))
     assert not bool(post.overflow)
+
+
+@pytest.mark.bench_smoke
+def test_build_bench_smoke(rng):
+    """benchmarks/fig_build.py's measurement path at tiny size: both build
+    backends run, the row carries every field BENCH_build.json reports,
+    and the structural invariants (m, occupancy, finite timings) hold. A
+    broken backend fails here instead of only in the benchmark run."""
+    from benchmarks.fig_build import measure_build
+
+    x = jnp.asarray(rng.normal(size=(160, 3)) * 0.5, jnp.float32)
+    row = measure_build(x, with_phases=True)
+    assert row["n"] == 160 and row["d"] == 3
+    assert 0 < row["m"] <= row["cap"]
+    assert 0 < row["occupancy"] <= 0.5
+    for backend in ("sort", "hash_xla"):
+        assert row[backend]["cold_s"] > 0
+        assert row[backend]["compile_s"] > 0
+        assert row[backend]["compile_s"] >= row[backend]["cold_s"]
+    assert row["cold_speedup"] > 0 and row["compile_speedup"] > 0
+    ph = row["phases"]
+    assert ph["embed_s"] > 0
+    assert set(ph["sort"]) == {"dedup_s", "neighbor_s"}
+    assert set(ph["hash"]) == {"dedup_s", "neighbor_s", "plan_s"}

@@ -339,3 +339,43 @@ def test_grow_and_retry_recovers_from_overflow(rng):
     lat = build_lattice_auto(x, spacing=0.5, r=1, cap=16)
     assert not bool(lat.overflow)
     assert lat.cap >= int(lat.m)
+
+
+def test_suggest_capacity_vmem_aware_rounding():
+    """Regression: the power-of-two rounding must not silently pick a cap
+    that defeats ``fits_vmem`` when the unrounded occupancy guess fits —
+    that spill cost the fused-MVM tier for no occupancy benefit."""
+    from repro.core.lattice import default_capacity, suggest_capacity
+    from repro.kernels.blur.ops import fits_vmem, max_cap_for_vmem
+
+    # find a size where the raw guess fits the fused VMEM plan but its
+    # power-of-two round-up does not (exists: the plan is linear in cap)
+    found = None
+    for n in range(20000, 70000, 500):
+        for d in (4, 8):
+            guess = max(1024, int(n * (d + 1) / 8.0))
+            pow2 = min(1 << (guess - 1).bit_length(), default_capacity(n, d))
+            if fits_vmem(n, d, 1, guess + 1, 1) and \
+                    not fits_vmem(n, d, 1, pow2 + 1, 1):
+                found = (n, d, guess, pow2)
+                break
+        if found:
+            break
+    assert found is not None, "no spill-prone size in scan range"
+    n, d, guess, pow2 = found
+
+    cap = suggest_capacity(n, d, 1.0, r=1, c=1)
+    assert cap < pow2  # the naive round-up was rejected
+    assert cap >= guess  # never below the occupancy guess
+    assert fits_vmem(n, d, 1, cap + 1, 1)  # and the clamp actually fits
+    # the clamp target is exactly the largest fitting capacity
+    assert fits_vmem(n, d, 1, max_cap_for_vmem(n, d, 1, 1) + 1, 1)
+    assert not fits_vmem(n, d, 1, max_cap_for_vmem(n, d, 1, 1) + 2, 1)
+    # opting out restores the plain power-of-two suggestion
+    assert suggest_capacity(n, d, 1.0, r=1, c=1, vmem_aware=False) == pow2
+    # a guess that itself spills is returned un-clamped (occupancy first)
+    big_n = 200000
+    cap_big = suggest_capacity(big_n, 8, 1.0, r=1, c=1)
+    assert cap_big == min(1 << (max(1024, int(big_n * 9 / 8.0))
+                                - 1).bit_length(),
+                          default_capacity(big_n, 8))

@@ -122,8 +122,8 @@ SHARDED_GP = textwrap.dedent("""
     y = jnp.asarray(np.sin(2 * np.asarray(x[:, 0]))
                     + 0.1 * rng.normal(size=n), jnp.float32)
     xs = jnp.asarray(rng.normal(size=(ns, d)), jnp.float32)
-    model = SimplexGP(SimplexGPConfig(kernel="matern32", max_cg_iters=30,
-                                      num_probes=4))
+    model = SimplexGP(SimplexGPConfig(kernel="matern32", max_cg_iters=200,
+                                      num_probes=4, cg_tol_eval=1e-4))
     params = GPParams.init(d)
     mesh = sx.data_mesh()
     key = jax.random.PRNGKey(0)
@@ -152,10 +152,14 @@ def test_sharded_gp_step_and_posterior_8dev(multidevice_run):
     operator reproduces the single-device numbers on 8 devices."""
     data = multidevice_run(SHARDED_GP)
     assert data["devices"] == 8
-    # CG/Lanczos amplify f32 summation-order noise (the MVM itself agrees
-    # to <= 1e-5 — see test_sharded_mvm_8dev_matches_fused); the *solved*
-    # outputs still agree to ~a percent.
+    # An UNCONVERGED CG iterate is path-sensitive: at the loose default
+    # eval tolerance, f32 summation-order noise (sharding or build-path
+    # slot ordering) steers CG through visibly different iterates, so the
+    # old ~1e-2 fence measured solver luck, not sharding correctness. At
+    # eval tol 1e-4 with iteration headroom both sides converge and the
+    # sharded posterior mean matches to ~1e-4 (measured 9.6e-5); the MLL
+    # keeps the paper's train tolerance and stays a ~1% stochastic match.
     assert data["mll_rel"] <= 2e-2
-    assert data["mean_rel"] <= 1e-2
+    assert data["mean_rel"] <= 1e-3
     assert data["var_max"] <= 5e-3
     assert data["grads_finite"]
