@@ -75,9 +75,9 @@ def _phase_fns(x, spacing: float, r: int, cap: int):
 
     @jax.jit
     def plan_hash(seg_ids):
-        # shared with the build impl so the phase times the variant the
-        # build actually runs (fused 1-column vs 2-array fallback)
-        return L._splat_plan_sort(seg_ids, big=big, cap=cap)
+        # shared with the build impl so the phase times the construction
+        # the build actually runs (sort-free counting/partition plan)
+        return L._splat_plan_counting(seg_ids, big=big, cap=cap)
 
     return embed, dedup_sort, dedup_hash, nbr_sort, nbr_hash, plan_hash
 

@@ -1,0 +1,130 @@
+"""Frozen-lattice serving latency vs the shared-lattice posterior path.
+
+The serving question (ROADMAP north star): what does ONE query batch cost
+once the model is trained? The ``posterior`` path pays a joint [X; X*]
+lattice build + CG solve + Lanczos per batch; the frozen ``Predictor``
+(gp/serve.py, DESIGN.md §12) pays embed + hash lookup + slice against
+precomputed tables — cost independent of n. This benchmark measures both
+on the same host and data:
+
+  freeze_s       one-time freeze cost (solves + one blur sweep + index)
+  posterior_s    per-batch latency of the jitted shared-lattice posterior
+  serve_s        per-batch latency of ``predict`` (warm bucket)
+  speedup        posterior_s / serve_s — the headline (>= 20x acceptance
+                 floor at n=4000, d=8; in practice orders of magnitude)
+
+plus the fidelity columns: mean/var parity between the two paths on
+in-lattice queries under a TIGHT-tolerance config (both CG solves
+converged, so the comparison isolates the frozen math from CG stopping
+noise — at the default eval tolerance 1e-2 the two solves legitimately
+differ by O(tol)), and the slice-miss diagnostic on off-lattice queries.
+Results land in BENCH_serve.json; the tier-1 ``bench_smoke`` test runs
+``measure_serve`` at tiny size so a broken serving path fails CI.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SCALE, emit, timeit, write_json
+from repro.gp import (GPParams, SimplexGP, SimplexGPConfig, freeze,
+                      posterior)
+from repro.gp.serve import predict
+
+SIZES = [(1000, 4), (4000, 8)]  # (n, d); 4000/8 is the acceptance config
+BQ = 512  # queries per serving batch
+RANK = 16  # LOVE variance rank for both paths
+
+# tight-tolerance config for the parity columns: both paths' CG converged
+# to the f32 floor, so parity measures the frozen math itself
+TIGHT = dict(cg_tol_eval=3e-7, max_cg_iters=400)
+
+
+def measure_serve(x, y, xs_in, xs_out, *, variance_rank: int = RANK,
+                  with_parity: bool = True) -> dict:
+    """Race one serving batch through both paths; returns a result row."""
+    n, d = x.shape
+    bq = xs_in.shape[0]
+    key = jax.random.PRNGKey(0)
+    params = GPParams.init(d)
+    model = SimplexGP(SimplexGPConfig(kernel="matern32"))
+
+    # --- latency at the DEFAULT eval config (what serving replaces) -------
+    @jax.jit
+    def post_fn(xs):
+        p = posterior(model, params, x, y, xs, key=key,
+                      variance_rank=variance_rank)
+        return p.mean, p.var
+    posterior_s = timeit(post_fn, xs_in)
+
+    t0 = time.perf_counter()
+    pred = freeze(model, params, x, y, key=key,
+                  variance_rank=variance_rank)
+    jax.block_until_ready(pred.tables)
+    freeze_s = time.perf_counter() - t0
+    serve_s = timeit(lambda: predict(pred, xs_in).mean)
+
+    row = {
+        "n": n, "d": d, "bq": bq, "m": pred.index.m,
+        "variance_rank": variance_rank,
+        "freeze_s": round(freeze_s, 4),
+        "posterior_s": round(posterior_s, 5),
+        "serve_s": round(serve_s, 6),
+        "speedup": round(posterior_s / serve_s, 1),
+        "per_query_us": round(serve_s / bq * 1e6, 2),
+        "qps": round(bq / serve_s, 0),
+        "table_kb": round(pred.tables.nbytes / 1024, 1),
+    }
+
+    # --- fidelity: in-lattice parity under the tight config ---------------
+    if with_parity:
+        tight = SimplexGP(SimplexGPConfig(kernel="matern32", **TIGHT))
+        pred_t = freeze(tight, params, x, y, key=key,
+                        variance_rank=variance_rank)
+        sr = predict(pred_t, xs_in)
+        pt = posterior(tight, params, x, y, xs_in, key=key,
+                       variance_rank=variance_rank)
+        row["mean_parity"] = float(jnp.max(jnp.abs(sr.mean - pt.mean)))
+        row["var_parity"] = float(jnp.max(jnp.abs(sr.var - pt.var)))
+        row["miss_in_lattice"] = float(jnp.max(sr.miss_mass))
+
+    # --- miss diagnostic on off-lattice queries ---------------------------
+    so = predict(pred, xs_out)
+    row["offlattice"] = {
+        "miss_frac": float(jnp.mean((so.miss_mass > 0).astype(jnp.float32))),
+        "mean_miss": float(jnp.mean(so.miss_mass)),
+        "max_miss": float(jnp.max(so.miss_mass)),
+    }
+    return row
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+    for n, d in SIZES:
+        n = int(n * SCALE)
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        y = (jnp.sin(2 * x[:, 0]) + 0.4 * x[:, 1] * x[:, 2]
+             + 0.05 * jnp.asarray(rng.normal(size=n), jnp.float32))
+        # in-lattice queries: train points (simplices fully in the lattice);
+        # off-lattice: fresh draws from a wider distribution
+        xs_in = x[:BQ]
+        xs_out = jnp.asarray(rng.normal(size=(BQ, d)) * 2.0, jnp.float32)
+        row = measure_serve(x, y, xs_in, xs_out)
+        emit(f"fig_serve/n{n}_d{d}", row["serve_s"],
+             f"posterior={row['posterior_s']:.3f}s "
+             f"serve={row['serve_s'] * 1e3:.2f}ms "
+             f"speedup={row['speedup']}x "
+             f"per_query={row['per_query_us']}us "
+             f"mean_parity={row['mean_parity']:.1e} "
+             f"miss_frac={row['offlattice']['miss_frac']:.2f}")
+        rows.append(row)
+    write_json("BENCH_serve.json", {"figure": "fig_serve", "bq": BQ,
+                                    "sizes": rows})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Fail-soft trend check over the committed BENCH_*.json artifacts (CI).
+
+The benchmark artifacts are committed alongside the code so the perf
+trajectory is reviewable per PR; this check keeps them honest without
+making CI flaky: it validates the SCALE-FREE invariants each artifact
+claims (speedup floors, parity/error ceilings, structural fields) inside
+tolerance bands. Absolute times are deliberately not compared — CI hosts
+differ wildly from the machines the artifacts were measured on; ratios
+and error bounds are host-portable.
+
+Fail-soft contract: band violations print GitHub ``::warning::``
+annotations and the process still exits 0 — the trend gate informs, the
+tier-1 tests enforce. Only a malformed/unreadable artifact (or
+``--strict``) exits nonzero, because that means the artifact pipeline
+itself broke.
+
+    PYTHONPATH=src python -m benchmarks.trend_check [--strict]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# (artifact, description, check) — check(payload) yields warning strings.
+# Bands are deliberately generous: they catch order-of-magnitude breaks
+# and sign flips, not single-digit-percent noise.
+
+
+def _check_build(p):
+    for row in p["sizes"]:
+        tag = f"n{row['n']}_d{row['d']}"
+        if row["cold_speedup"] < 0.8:
+            yield (f"fig_build {tag}: hash cold build slower than sort "
+                   f"(cold_speedup={row['cold_speedup']} < 0.8)")
+        if not 0 < row["m"] <= row["cap"]:
+            yield f"fig_build {tag}: m={row['m']} outside (0, cap]"
+        if row["occupancy"] > 0.5:
+            yield (f"fig_build {tag}: hash occupancy {row['occupancy']} "
+                   "> 0.5 — probe costs degrade")
+
+
+def _check_serve(p):
+    for row in p["sizes"]:
+        tag = f"n{row['n']}_d{row['d']}"
+        if row["n"] >= 4000 and row["speedup"] < 20:
+            yield (f"fig_serve {tag}: serving speedup {row['speedup']}x "
+                   "below the 20x acceptance floor")
+        if row.get("mean_parity", 0) > 1e-5:
+            yield (f"fig_serve {tag}: in-lattice mean parity "
+                   f"{row['mean_parity']:.2e} > 1e-5")
+        if row.get("miss_in_lattice", 0) > 0:
+            yield (f"fig_serve {tag}: in-lattice queries report nonzero "
+                   f"slice miss ({row['miss_in_lattice']})")
+        off = row.get("offlattice", {})
+        if not 0 <= off.get("mean_miss", 0) <= 1:
+            yield f"fig_serve {tag}: off-lattice miss mass outside [0, 1]"
+
+
+def _check_mvm(p):
+    for row in p.get("sizes", []):
+        for k, v in row.items():
+            if k.endswith("err") and isinstance(v, (int, float)) and v > 1e-4:
+                yield (f"fig6 n{row.get('n')}: backend divergence "
+                       f"{k}={v:.2e} > 1e-4")
+
+
+def _check_train(p):
+    for row in p.get("sizes", []):
+        shared = row.get("shared", {})
+        for k in ("builds_per_step", "builds_per_posterior"):
+            if shared.get(k, 1) > 1:
+                yield (f"fig_train n{row.get('n')}: shared-lattice {k}="
+                       f"{shared[k]} > 1 — the §9 contract broke")
+
+
+CHECKS = [
+    ("BENCH_build.json", _check_build),
+    ("BENCH_serve.json", _check_serve),
+    ("BENCH_mvm.json", _check_mvm),
+    ("BENCH_train.json", _check_train),
+]
+
+
+def main(argv=None) -> int:
+    strict = "--strict" in (argv if argv is not None else sys.argv[1:])
+    warnings, malformed = [], []
+    for name, check in CHECKS:
+        path = ROOT / name
+        if not path.exists():
+            # artifacts are optional until their benchmark has run once
+            print(f"trend_check: {name} not committed yet — skipped")
+            continue
+        try:
+            payload = json.loads(path.read_text())
+            warnings.extend(check(payload))
+        except (json.JSONDecodeError, KeyError, TypeError) as e:
+            malformed.append(f"{name}: {type(e).__name__}: {e}")
+    for w in warnings:
+        print(f"::warning title=benchmark trend::{w}")
+    for m in malformed:
+        print(f"::error title=malformed benchmark artifact::{m}")
+    print(f"trend_check: {len(warnings)} warning(s), "
+          f"{len(malformed)} malformed artifact(s)")
+    if malformed or (strict and warnings):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,73 @@
+"""Minimal frozen-lattice serving walkthrough (DESIGN.md §12).
+
+Train once, freeze once, then serve query batches at O(d^2) per query —
+no lattice build, no CG solve, cost independent of n.
+
+    PYTHONPATH=src python examples/serve_minimal.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gp import (GPParams, SimplexGP, SimplexGPConfig, fit, freeze,
+                      posterior)
+from repro.gp.serve import predict
+
+# --- data: a smooth function of 4 inputs + noise ---------------------------
+rng = np.random.default_rng(0)
+n, d = 2000, 4
+x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+f = jnp.sin(2 * x[:, 0]) + 0.5 * jnp.cos(x[:, 1] * x[:, 2]) + 0.3 * x[:, 3]
+y = f + 0.1 * jnp.asarray(rng.normal(size=n), jnp.float32)
+x_tr, y_tr = x[:1400], y[:1400]
+x_val, y_val = x[1400:1700], f[1400:1700]
+
+model = SimplexGP(SimplexGPConfig(kernel="matern32"))
+
+# --- train (once) ----------------------------------------------------------
+result = fit(model, x_tr, y_tr, x_val=x_val, y_val=y_val, epochs=10, lr=0.1)
+params = result.best_params
+
+# --- freeze (once): solves + one blur sweep -> immutable Predictor ---------
+t0 = time.perf_counter()
+pred = freeze(model, params, x_tr, y_tr, key=jax.random.PRNGKey(0),
+              variance_rank=20)
+print(f"freeze: {time.perf_counter() - t0:.2f}s  "
+      f"(tables {pred.tables.shape}, {pred.tables.nbytes / 1024:.0f} KB, "
+      f"hash index {pred.index.hcap} slots)")
+
+# --- serve: batches pad to fixed buckets; first call per bucket compiles ---
+queries = jnp.asarray(rng.normal(size=(200, d)), jnp.float32)
+out = predict(pred, queries)  # warm-up / compile for the 256 bucket
+t0 = time.perf_counter()
+out = jax.block_until_ready(predict(pred, queries))
+dt = time.perf_counter() - t0
+print(f"serve: {dt * 1e3:.2f} ms / {queries.shape[0]} queries "
+      f"({dt / queries.shape[0] * 1e6:.1f} us each)")
+
+# miss_mass is the fidelity diagnostic: barycentric weight on lattice
+# vertices the frozen model never saw. 0 = fully in-lattice; near 1 =
+# the prediction is mostly prior. Alert on it in a real deployment.
+frac_clean = float(jnp.mean((out.miss_mass == 0).astype(jnp.float32)))
+print(f"miss_mass: {frac_clean:.0%} of queries fully in-lattice, "
+      f"mean mass {float(jnp.mean(out.miss_mass)):.3f}")
+
+# predictive-y variance adds the learned noise
+pred_var = out.var + pred.noise
+print(f"mean[:4]  {np.asarray(out.mean[:4]).round(3)}")
+print(f"var[:4]   {np.asarray(pred_var[:4]).round(3)}")
+
+# --- sanity: the frozen path tracks the full posterior ---------------------
+# The gap at the DEFAULT eval tolerance is dominated by CG stopping noise
+# (both paths solve to rel. residual cg_tol_eval=1e-2, on marginally
+# different lattices); with a converged-CG config it drops to ~1e-6 —
+# see BENCH_serve.json's mean_parity column and tests/test_serve.py.
+post = posterior(model, params, x_tr, y_tr, queries,
+                 key=jax.random.PRNGKey(0), variance_rank=20)
+clean = np.asarray(out.miss_mass) == 0
+gap = np.abs(np.asarray(out.mean) - np.asarray(post.mean))[clean]
+print(f"frozen vs posterior mean gap on in-lattice queries: "
+      f"max {gap.max():.2e}  (~cg_tol_eval; see BENCH_serve.json "
+      "mean_parity for the converged-CG figure)")

@@ -356,6 +356,36 @@ class LatticeCache:
         return lat
 
 
+def slice_only(index: "lat_mod.LatticeIndex", tables: Array, zq: Array, *,
+               spacing: float, backend: str = "auto",
+               interpret: bool | None = None) -> tuple[Array, Array]:
+    """Slice FROZEN per-lattice-point tables at new points — no build, no
+    solve (the serving entry point, DESIGN.md §12).
+
+    Embeds ``zq`` ((b, d) lengthscale-normalized queries; O(d^2) per
+    point, sort-free), probes the lattice hash index for each enclosing
+    vertex, and barycentrically contracts the frozen ``tables`` rows.
+    Lookup-miss semantics: vertices absent from the index contribute ZERO
+    (the standard permutohedral slicing convention — the frozen lattice
+    simply has no mass there), and each query's barycentric mass on
+    absent vertices is returned as ``miss`` — the per-batch fidelity
+    diagnostic (0 = the query's simplex is entirely inside the frozen
+    lattice; 1 = completely off-lattice, prediction falls back to the
+    prior). ``backend`` selects the kernels/slice/ops.py tier.
+    """
+    from repro.kernels.slice.ops import slice_query
+    b, d = zq.shape
+    keys, w = lat_mod.simplex_embed(zq, spacing)
+    q_packed = jnp.stack(
+        lat_mod._pack_key_cols(keys.reshape(b * (d + 1), d + 1)), axis=1)
+    # queries whose coordinates overflow the 16-bit packing could alias
+    # real keys — force all their vertices to miss (reported as mass 1)
+    ok = jnp.all(jnp.abs(keys) <= lat_mod._PACK_LIMIT, axis=(1, 2))
+    active = jnp.repeat(ok, d + 1)
+    return slice_query(index, tables, q_packed, w.astype(tables.dtype),
+                       active, backend=backend, interpret=interpret)
+
+
 def mvm_operator(z: Array, stencil: Stencil, *, cap: int | None = None,
                  symmetrize: bool = True, backend: str = "auto",
                  build_backend: str = "auto",

@@ -50,6 +50,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.hash import ops as hash_ops
 
@@ -102,15 +103,20 @@ def simplex_embed(z: Array, spacing: float):
     rem0 = jnp.round(v) * (d + 1.0)  # (n, d+1) float
     diff = el - rem0
 
-    # rank[i] = how many coords have a strictly larger differential
-    # (stable argsort of -diff, then invert the permutation). The integer
-    # lattice structure carries no gradient — stop_gradient keeps autodiff
-    # (the beyond-paper grad_mode="autodiff" path, which differentiates the
-    # barycentric weights) from tracing through the sort.
-    order = jnp.argsort(jax.lax.stop_gradient(-diff), axis=1, stable=True)
-    rank = jnp.zeros((n, d + 1), dtype=jnp.int32)
-    rank = jax.vmap(lambda o: jnp.zeros(d + 1, jnp.int32).at[o].set(
-        jnp.arange(d + 1, dtype=jnp.int32)))(order)
+    # rank[i] = how many coords have a strictly larger differential, ties
+    # broken by position — the stable descending rank, computed as an
+    # O(d^2)-per-point pairwise comparison count instead of an argsort.
+    # Bit-identical to the stable argsort it replaces, but keeps the whole
+    # embed (and hence the hash build and the frozen serving path,
+    # DESIGN.md §12) free of `lax.sort`. The integer lattice structure
+    # carries no gradient — stop_gradient keeps autodiff (the beyond-paper
+    # grad_mode="autodiff" path, which differentiates the barycentric
+    # weights) from tracing through the comparisons.
+    nd_ = jax.lax.stop_gradient(diff)
+    pos = jnp.tril(jnp.ones((d + 1, d + 1), bool), k=-1)  # [a, b]: b < a
+    bigger = nd_[:, None, :] > nd_[:, :, None]  # [n, a, b]: diff_b > diff_a
+    ties = (nd_[:, None, :] == nd_[:, :, None]) & pos[None]
+    rank = jnp.sum(bigger | ties, axis=2).astype(jnp.int32)
 
     # Fix up so coordinates sum to zero on the lattice plane.
     coordsum = jnp.round(jnp.sum(rem0, axis=1) / (d + 1.0)).astype(jnp.int32)
@@ -254,8 +260,49 @@ def default_capacity(n: int, d: int) -> int:
     return n * (d + 1)
 
 
+@functools.partial(jax.jit, static_argnames=("hcap",))
+def _distinct_keys(packed: Array, hcap: int) -> Array:
+    owner, _, _ = hash_ops.hash_insert(packed, hcap, backend="hash_xla")
+    return jnp.sum((owner < packed.shape[0]).astype(jnp.int32))
+
+
+def estimate_m(z: Array, spacing: float, *, sample: int = 4096) -> int:
+    """Estimate the deduplicated lattice size m by hash-inserting a subsample.
+
+    ``suggest_capacity``'s constant-occupancy guess knows nothing about the
+    data; this inserts the vertex keys of an evenly-strided subsample at two
+    scales (s and s/2) and extrapolates with the fitted power law
+    ``m(n) ~ n^gamma`` (gamma in [0, 1]: 0 = the subsample already saturated
+    the lattice, 1 = every point contributes fresh vertices). Exact when
+    ``sample >= n``. Eager-only (returns a concrete int); cost is one
+    O(sample * d) insert — trivial next to a full build.
+    """
+    n, d = z.shape
+    s = min(n, max(int(sample), 64))
+    stride = max(1, n // s)
+    zs = z[::stride][:s]
+    s = int(zs.shape[0])
+
+    def distinct(zz) -> int:
+        keys, _ = simplex_embed(zz, spacing)
+        packed = jnp.stack(_pack_key_cols(
+            keys.reshape(zz.shape[0] * (d + 1), d + 1)), axis=1)
+        return int(_distinct_keys(
+            packed, hash_ops.hash_capacity(zz.shape[0] * (d + 1))))
+
+    m_s = distinct(zs)
+    if s >= n:
+        return m_s  # the "subsample" was the whole set: exact
+    half = max(s // 2, 32)
+    m_h = distinct(zs[:half])
+    gamma = math.log(max(m_s, 1) / max(m_h, 1)) / math.log(s / half)
+    gamma = min(max(gamma, 0.0), 1.0)
+    return int(math.ceil(m_s * (n / s) ** gamma))
+
+
 def suggest_capacity(n: int, d: int, spacing: float, *, r: int = 1,
-                     c: int = 1, vmem_aware: bool = True) -> int:
+                     c: int = 1, vmem_aware: bool = True,
+                     z: Array | None = None, sample: int = 4096) -> int:
     """Heuristic starting capacity for grow-and-retry builds.
 
     The worst case m = n (d+1) is wildly pessimistic for real data (paper
@@ -266,6 +313,14 @@ def suggest_capacity(n: int, d: int, spacing: float, *, r: int = 1,
     coarser cells, hence fewer of them), round up to a power of two, and let
     ``build_lattice_auto`` grow on overflow.
 
+    ``z`` (the lengthscale-normalized points about to be embedded) switches
+    to the data-aware guess: ``estimate_m`` hash-inserts a subsample and the
+    cap starts at the estimate plus modest headroom, instead of the blind
+    constant-occupancy formula — on clustered data this shrinks the
+    neighbor table, the fused-MVM VMEM plan, and the frozen serving tables
+    (DESIGN.md §12) by the m/guess ratio. Underestimates are safe: the
+    grow-and-retry contract catches them via the overflow flag.
+
     ``vmem_aware`` guards the power-of-two rounding against silently
     defeating ``kernels.blur.ops.fits_vmem``: when the raw guess fits the
     fused MVM's VMEM plan (for ``r`` and ``c`` channels) but the rounded
@@ -274,7 +329,10 @@ def suggest_capacity(n: int, d: int, spacing: float, *, r: int = 1,
     unrounded is returned as-is — occupancy beats fusion (the blocked/XLA
     tiers handle oversized tables; under-capacity would corrupt results).
     """
-    guess = max(1024, int(n * (d + 1) / (8.0 * max(spacing, 0.25))))
+    if z is not None and not isinstance(z, jax.core.Tracer):
+        guess = max(1024, int(1.25 * estimate_m(z, spacing, sample=sample)))
+    else:
+        guess = max(1024, int(n * (d + 1) / (8.0 * max(spacing, 0.25))))
     # round up to a power of two, but never past the provable worst case
     cap = min(1 << (guess - 1).bit_length(), default_capacity(n, d))
     if vmem_aware:
@@ -301,7 +359,7 @@ def build_lattice_auto(z: Array, *, spacing: float, r: int = 1,
     n, d = z.shape
     worst = default_capacity(n, d)
     if cap is None:
-        cap = suggest_capacity(n, d, spacing, r=r)
+        cap = suggest_capacity(n, d, spacing, r=r, z=z)
     for _ in range(max_tries):
         lat = build_lattice(z, spacing=spacing, r=r, cap=min(cap, worst),
                             backend=backend)
@@ -482,26 +540,75 @@ def _neighbor_table(coords: Array, valid: Array, *, d: int, r: int,
 # ---------------------------------------------------------------------------
 
 
-def _splat_plan_sort(seg_ids: Array, *, big: int, cap: int):
-    """Sort contributions by slot for the §8 splat plan -> (seg_sorted, perm).
+def _counting_plan_shape(dom: int) -> tuple[int, int]:
+    """(block, unroll) for ``_splat_plan_counting``, tuned on this host:
+    small count states amortize the scan with deep unrolling; large ones
+    are carry-copy bound and prefer fewer, wider steps."""
+    return (64, 32) if dom <= (1 << 15) + 2 else (128, 8)
 
-    The hash insert has no sorted order, so the plan comes from ONE
-    single-column sort of ``(slot << bits(N)) | row`` — grouping by slot
-    with row order preserved inside each group, the same intra-slot order
-    as the stable dedup sort, so splat results match bit-for-bit up to
-    the segmented scan's global-order f32 noise. Caps too large for the
-    fused int32 key fall back to a two-array single-key sort. Shared with
-    the build benchmark's phase breakdown so it times the variant the
-    build actually runs.
+
+def _splat_plan_counting(seg_ids: Array, *, big: int, cap: int):
+    """Group contributions by slot for the §8 splat plan — NO ``lax.sort``.
+
+    A stable counting/partition construction over the already-known slot
+    ids (ROADMAP item; replaces the single-column ``(slot << bits) | row``
+    sort AND its two-array fallback): each contribution's destination is
+    ``start[slot] + rank``, where ``start`` is the exclusive cumsum of the
+    per-slot counts and ``rank`` is the contribution's stable index among
+    same-slot predecessors. The rank — the only genuinely hard part of a
+    sort-free counting sort — splits across ``B``-element blocks:
+
+      * within a block: a lower-triangular pairwise equality count
+        (``big * B`` comparisons, fully vectorized);
+      * across blocks: ONE ``lax.scan`` over blocks carrying the running
+        per-slot count table — gather-before-update yields each element's
+        count over strictly earlier blocks, and the carry aliases in
+        place, so the sweep is O(big) work + O(big / B) sequential steps
+        (``K`` blocks unrolled per step to amortize loop overhead) with
+        no (blocks x domain) histogram ever materialized.
+
+    The resulting order is bit-identical to the stable sort it replaces
+    (ascending slot, original row order within a slot), so the splat plan
+    — and the fused kernel's segmented scan — are unchanged. All
+    primitives are gathers, scatters, and cumsums; the hash build's jaxpr
+    is asserted sort-free in tests/test_lattice_hash.py.
     """
-    nb = max(1, (big - 1).bit_length())
-    if int(cap).bit_length() + nb <= 31:  # fused single-column key fits
-        comb = (seg_ids << nb) | jnp.arange(big, dtype=jnp.int32)
-        (scomb,) = jax.lax.sort((comb,), num_keys=1)
-        return scomb >> nb, scomb & ((1 << nb) - 1)
-    # huge worst-case caps: plain (key, payload) single-key sort
-    return jax.lax.sort((seg_ids, jnp.arange(big, dtype=jnp.int32)),
-                        num_keys=1)
+    dom = cap + 2  # slots 0..cap, plus a padding value colliding with nothing
+    bsz, unroll = _counting_plan_shape(dom)
+    chunk = bsz * unroll
+    padded = -(-big // chunk) * chunk
+    seg_p = seg_ids if padded == big else jnp.concatenate(
+        [seg_ids, jnp.full((padded - big,), cap + 1, jnp.int32)])
+    blocks = seg_p.reshape(padded // bsz, bsz)
+
+    # stable rank within each block: #{j < i in block : seg_j == seg_i}
+    tri = jnp.tril(jnp.ones((bsz, bsz), bool), k=-1)  # [i, j]: j < i
+    eq = blocks[:, :, None] == blocks[:, None, :]  # [b, i, j]
+    local = jnp.sum(eq & tri[None], axis=2).astype(jnp.int32).reshape(padded)
+
+    # cross-block prefix: count of each slot over all EARLIER blocks,
+    # carried through the scan (read the count, then add the block)
+    def body(cnt, bs):  # bs: (unroll, bsz)
+        crosses = []
+        for k in range(unroll):
+            crosses.append(cnt[bs[k]])
+            cnt = cnt.at[bs[k]].add(1)
+        return cnt, jnp.stack(crosses)
+
+    cnt, cross = jax.lax.scan(body, jnp.zeros((dom,), jnp.int32),
+                              seg_p.reshape(padded // chunk, unroll, bsz))
+    rank = (cross.reshape(padded) + local)[:big]
+
+    # destination = slot's exclusive start + stable rank; a bijection on
+    # [0, big), so one permutation scatter materializes the plan
+    starts = jnp.concatenate([
+        jnp.zeros((1,), jnp.int32),
+        jnp.cumsum(cnt[: cap + 1])[:-1].astype(jnp.int32)])
+    dest = starts[seg_ids] + rank
+    perm = jnp.zeros((big,), jnp.int32).at[dest].set(
+        jnp.arange(big, dtype=jnp.int32))
+    seg_sorted = jnp.zeros((big,), jnp.int32).at[dest].set(seg_ids)
+    return seg_sorted, perm
 
 
 @functools.partial(jax.jit, static_argnames=("r", "cap", "backend"))
@@ -511,9 +618,10 @@ def _build_lattice_hash_impl(z: Array, *, spacing: float, r: int, cap: int,
 
     Replaces both ``_lex_sort`` passes of ``_build_lattice_impl`` with the
     kernels/hash table — O(n d · probes) with near-constant probes at
-    <= 0.5 occupancy — and derives the sorted splat plan from ONE cheap
-    single-column sort (slot << bits | row) instead of the multi-column
-    key sort. Produces an operator-equivalent ``Lattice``: identical
+    <= 0.5 occupancy — and derives the sorted splat plan from the
+    counting/partition construction (``_splat_plan_counting``), making the
+    whole hash build — embed, dedup, neighbors, plan — free of
+    ``lax.sort``. Produces an operator-equivalent ``Lattice``: identical
     deduplicated point set, seg structure, neighbor graph, and
     overflow/pack_overflow semantics; only the slot NUMBERING (hash
     placement vs lex order) differs.
@@ -547,7 +655,7 @@ def _build_lattice_hash_impl(z: Array, *, spacing: float, r: int, cap: int,
     valid = valid.at[cap].set(False)
 
     # ---- sorted splat plan (DESIGN.md §8) ----------------------------------
-    seg_sorted, perm = _splat_plan_sort(seg_ids, big=big, cap=cap)
+    seg_sorted, perm = _splat_plan_counting(seg_ids, big=big, cap=cap)
     sort_row = perm // (d + 1)
     sort_w = weights.reshape(big)[perm]
     seg_head = jnp.concatenate([jnp.ones((1,), bool),
@@ -652,3 +760,68 @@ def slice_(lat: Lattice, vals: Array) -> Array:
     per_vertex = vals[lat.seg_ids]  # (n*(d+1), c)
     per_vertex = per_vertex.reshape(lat.n, lat.d + 1, -1)
     return jnp.einsum("nkc,nk->nc", per_vertex, lat.weights)
+
+
+# ---------------------------------------------------------------------------
+# Frozen lattice index (DESIGN.md §12): slice-only queries at NEW points.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LatticeIndex:
+    """Hash index over a built lattice's occupied points.
+
+    The serving-path complement of ``Lattice``: where the build resolves
+    blur neighbors once for the training points, the index lets FROZEN
+    per-lattice-point tables be sliced at arbitrary new points — embed the
+    query, probe ``tkeys`` for each of its d+1 enclosing vertices, map hits
+    to dense rows via ``row_of_slot``. Vertices absent from the index map
+    to the zero row ``m`` and contribute nothing (the standard
+    permutohedral slicing semantics); their barycentric mass is the
+    query's "slice miss" diagnostic. Build-path agnostic: constructed from
+    the deduplicated coords, so sort- and hash-built lattices index
+    identically (up to the dense row permutation, which the compacted
+    tables absorb).
+    """
+
+    tkeys: Array  # (hcap, npk) int32 packed keys; empty -> ref.KEY_SENTINEL
+    row_of_slot: Array  # (hcap,) int32: hash slot -> dense row in [0, m]
+    slots: Array  # (m,) int32: lattice slot of each dense row (for compact)
+    d: int = dataclasses.field(metadata=dict(static=True))
+    hcap: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+
+
+def lattice_index(lat: Lattice) -> LatticeIndex:
+    """Build the frozen query index for ``lat``. Eager-only: the dense
+    table size is the CONCRETE occupied count m (not the static cap), so
+    frozen tables shrink from (cap+1) to (m+1) rows — the right-sizing
+    that keeps serving tables VMEM-resident."""
+    valid = np.asarray(lat.valid)
+    slots = np.nonzero(valid)[0].astype(np.int32)
+    m = int(slots.shape[0])
+    if m == 0:
+        raise ValueError("cannot index an empty lattice")
+    coords = jnp.asarray(np.asarray(lat.coords)[slots])
+    packed = jnp.stack(_pack_key_cols(coords), axis=1)
+    hcap = hash_ops.hash_capacity(m)
+    owner, _, ok = hash_ops.hash_insert(packed, hcap, backend="hash_xla")
+    if not bool(jnp.all(ok)):  # pragma: no cover - unique keys, occ <= 0.5
+        raise RuntimeError("lattice_index insert failed on unique keys")
+    occ = owner < m
+    # keys are unique, so each occupied slot's owner IS its dense row id
+    row_of_slot = jnp.where(occ, owner, m).astype(jnp.int32)
+    return LatticeIndex(tkeys=hash_ops.table_keys(owner, packed),
+                        row_of_slot=row_of_slot, slots=jnp.asarray(slots),
+                        d=lat.d, hcap=hcap, m=m)
+
+
+def compact_table(index: LatticeIndex, table: Array) -> Array:
+    """(cap+1, c) per-lattice-point values -> (m+1, c) dense serving table.
+
+    Row ``m`` is the zero miss row every absent-vertex lookup lands on.
+    """
+    vals = jnp.take(table, index.slots, axis=0)
+    return jnp.concatenate(
+        [vals, jnp.zeros((1, table.shape[1]), table.dtype)], axis=0)

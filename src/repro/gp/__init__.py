@@ -2,8 +2,14 @@
 from repro.gp.models import GPParams, SimplexGP, SimplexGPConfig
 from repro.gp.mll import MLLResult, mll_value_and_grad
 from repro.gp.predict import Posterior, cross_mvm, nll, posterior, rmse
+# NOTE: serve.predict is deliberately NOT re-exported here — the package
+# attribute ``repro.gp.predict`` must stay the submodule above, not a
+# function shadowing it. Serving call sites use
+# ``from repro.gp.serve import predict``.
+from repro.gp.serve import Predictor, ServeResult, freeze
 from repro.gp.train import TrainResult, fit
 
 __all__ = ["GPParams", "SimplexGP", "SimplexGPConfig", "MLLResult",
            "mll_value_and_grad", "Posterior", "cross_mvm", "nll",
-           "posterior", "rmse", "TrainResult", "fit"]
+           "posterior", "rmse", "TrainResult", "fit", "Predictor",
+           "ServeResult", "freeze"]

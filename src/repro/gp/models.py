@@ -94,6 +94,13 @@ class SimplexGPConfig:
     # Preconditioned runs fall back to "slq" (the CG tridiagonals then
     # describe the preconditioned operator, not K_hat).
     logdet_estimator: str = "cg"
+    # frozen-lattice serving (gp/serve.py; DESIGN.md §12): the query-path
+    # backend (kernels/slice/ops.py policy — "auto" fuses lookup + slice
+    # into one Pallas kernel on TPU when the frozen state fits VMEM) and
+    # the fixed padding-bucket sizes jit compiles per (not per batch
+    # shape).
+    serve_backend: str = "auto"
+    serve_buckets: tuple[int, ...] = (64, 256, 1024, 4096)
 
 
 class Operator(NamedTuple):

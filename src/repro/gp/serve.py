@@ -1,0 +1,247 @@
+"""Frozen-lattice serving (DESIGN.md §12): precomputed Simplex-GP predictor.
+
+``gp/predict.posterior`` pays a joint-lattice build plus CG/Lanczos solves
+for EVERY query batch — fine for benchmarking, fatal for serving. But SKI
+prediction reduces to interpolating precomputed grid quantities (KISS-GP,
+Wilson & Nickisch 2015; Yadav et al. 2021 decouple query cost from n
+entirely), and on the permutohedral lattice the analogue is exact:
+
+  mean(x*)  = k_{*,X} alpha            with alpha = K_hat^{-1} y
+            = w(x*)^T  [B W^T alpha]   — slice of a PRECOMPUTED table
+  var(x*)   = k(0) - || w(x*)^T [B W^T R] ||^2
+            with R = Q (T + eps I)^{-1/2} the LOVE root from k Lanczos
+            iterations (the same T/Q ``posterior`` uses; the inverse
+            square root via the k x k eigendecomposition)
+
+so ``freeze`` solves ONCE at train time, splats [alpha | R] onto the
+train lattice, runs the 2(d+1) blur sweeps ONCE (batched over the 1 + k
+channels), and keeps only the blurred value tables — compacted to the
+m + 1 occupied rows — plus the hash index for vertex lookup. Per query,
+``predict`` is embed (O(d^2), sort-free) + d+1 hash probes + a batched
+multi-channel barycentric slice: no build, no solve, no collective, cost
+independent of n. Queries landing outside the frozen lattice lose the
+mass of their absent vertices (standard slicing semantics) and report it
+as the ``miss_mass`` fidelity diagnostic.
+
+Serving mechanics: ``predict`` pads each batch to a fixed bucket size
+(``SimplexGPConfig.serve_buckets``) so jit compiles once per bucket
+rather than once per batch shape, donates the padded query buffer, and
+optionally fans queries over a device mesh with the frozen tables
+REPLICATED — zero collectives, linear throughput scaling
+(sharding/simplex.py's serving contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import filtering
+from repro.core import lattice as lat_mod
+from repro.core.filtering import LatticeCache
+from repro.core.lattice import LatticeIndex
+from repro.gp.models import GPParams, SimplexGP
+from repro.solvers.cg import cg as cg_solve
+from repro.solvers.lanczos import lanczos as lanczos_run
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Predictor:
+    """Immutable frozen-model state: everything a query needs, nothing else.
+
+    ``tables`` column 0 is the mean channel (os * blurred splat of alpha);
+    columns 1..k are the LOVE variance channels (os * blurred splat of the
+    root R), so var = outputscale - sum_j table_j(x*)^2. A pytree — safe
+    to pass through jit, replicate across a mesh, or checkpoint.
+    """
+
+    index: LatticeIndex  # hash index over the frozen train lattice
+    tables: Array  # (m+1, 1+k) f32 blurred [mean | LOVE root] channels
+    lengthscale: Array  # (d,)
+    outputscale: Array  # ()
+    noise: Array  # () — for predictive-y variance (latent var + noise)
+    spacing: float = dataclasses.field(metadata=dict(static=True))
+    backend: str = dataclasses.field(default="auto",
+                                     metadata=dict(static=True))
+    buckets: tuple[int, ...] = dataclasses.field(
+        default=(64, 256, 1024, 4096), metadata=dict(static=True))
+    n_train: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+
+class ServeResult(NamedTuple):
+    mean: Array  # (b,)
+    var: Array  # (b,) latent-f variance (add pred.noise for predictive y)
+    miss_mass: Array  # (b,) in [0, 1]: barycentric mass on absent vertices
+
+
+@functools.partial(jax.jit, static_argnames=("model", "variance_rank"))
+def _freeze_tables(model: SimplexGP, params: GPParams, lat, x: Array,
+                   y: Array, key: Array, variance_rank: int) -> Array:
+    """alpha + LOVE-root solves and the one batched splat->blur sweep."""
+    cfg = model.config
+    st = model.stencil
+    n = x.shape[0]
+    _, os_, _ = model.constrained(params)
+    op = model.operator(params, x, lat=lat)
+
+    u, _ = cg_solve(op.mvm, y[:, None], tol=cfg.cg_tol_eval,
+                    max_iters=cfg.max_cg_iters)
+
+    # LOVE basis — the same y-seeded Lanczos run ``posterior`` does
+    q0 = y[:, None] + 1e-3 * jax.random.normal(key, (n, 1), x.dtype)
+    lres = lanczos_run(op.mvm, q0, variance_rank)
+    q = lres.q[:, :, 0].T  # (n, k)
+    tdense = (jnp.diag(jnp.where(lres.valid[:, 0], lres.alphas[:, 0], 1.0))
+              + jnp.diag(lres.betas[:-1, 0] * lres.valid[:-1, 0]
+                         * lres.valid[1:, 0], 1)
+              + jnp.diag(lres.betas[:-1, 0] * lres.valid[:-1, 0]
+                         * lres.valid[1:, 0], -1))
+    # (T + eps I)^{-1/2} via the k x k eigendecomposition: identical
+    # quadratic form to posterior's (T + eps I)^{-1} solve
+    e, vecs = jnp.linalg.eigh(
+        tdense + 1e-6 * jnp.eye(tdense.shape[0], dtype=x.dtype))
+    root = q @ (vecs * jnp.where(e > 1e-10,
+                                 jax.lax.rsqrt(jnp.maximum(e, 1e-10)),
+                                 0.0)[None, :])
+
+    # ONE batched splat + 2(d+1) blur sweeps for all 1 + k channels
+    chans = jnp.concatenate([u, root], axis=1)
+    w = jnp.asarray(st.weights, x.dtype)
+    table = lat_mod.splat_sorted(lat, chans)
+    blurred = lat_mod.blur(lat, table, w)
+    if cfg.symmetrize:
+        blurred = 0.5 * (blurred + lat_mod.blur(lat, table, w, reverse=True))
+    return os_ * blurred  # (cap+1, 1+k)
+
+
+def freeze(model: SimplexGP, params: GPParams, x: Array, y: Array, *,
+           key: Array, variance_rank: int = 30, cap: int | None = None,
+           cache: LatticeCache | None = None) -> Predictor:
+    """Freeze a trained model into an immutable serving ``Predictor``.
+
+    One-time cost (amortized over every future query): a train-lattice
+    build (auto-sized unless ``cap`` given; ``cache`` memoizes it), the
+    alpha/LOVE solves, one batched blur sweep, and the hash-index build.
+    Eager-only: the dense tables are sized by the CONCRETE occupied count
+    m, which is what keeps them small enough to stay VMEM-resident.
+    """
+    cfg = model.config
+    st = model.stencil
+    ls, os_, noise = model.constrained(params)
+    z = x / ls[None, :]
+    if cap is None and cache is None:
+        lat = lat_mod.build_lattice_auto(z, spacing=st.spacing, r=st.r,
+                                         backend=cfg.build_backend)
+    elif cache is not None:
+        n, d = x.shape
+        cap_val = model.capacity(n, d) if cap is None else cap
+        lat = cache.get(cache.point_set_tag(x), z, spacing=st.spacing,
+                        r=st.r, cap=cap_val, ls=ls,
+                        build_backend=cfg.build_backend)
+    else:
+        lat = lat_mod.build_lattice(z, spacing=st.spacing, r=st.r, cap=cap,
+                                    backend=cfg.build_backend)
+    if bool(lat.pack_overflow):
+        raise RuntimeError("freeze: lattice coordinate range overflow "
+                           "(|coord| > 2^15) — rescale inputs or bound "
+                           "the lengthscale")
+    if bool(lat.overflow):
+        raise RuntimeError("freeze: lattice capacity overflow — pass a "
+                           "larger cap (or let build_lattice_auto size it)")
+
+    blurred = _freeze_tables(model, params, lat, x, y, key, variance_rank)
+    index = lat_mod.lattice_index(lat)
+    tables = lat_mod.compact_table(index, blurred)
+    return Predictor(index=index, tables=tables, lengthscale=ls,
+                     outputscale=os_, noise=noise, spacing=st.spacing,
+                     backend=cfg.serve_backend,
+                     buckets=tuple(cfg.serve_buckets),
+                     n_train=x.shape[0])
+
+
+def _predict_core(pred: Predictor, xs: Array, *, backend: str,
+                  interpret: bool | None = None):
+    zq = xs / pred.lengthscale[None, :]
+    out, miss = filtering.slice_only(pred.index, pred.tables, zq,
+                                     spacing=pred.spacing, backend=backend,
+                                     interpret=interpret)
+    mean = out[:, 0]
+    var = pred.outputscale - jnp.sum(out[:, 1:] ** 2, axis=1)
+    var = jnp.clip(var, 1e-6, pred.outputscale)
+    return mean, var, miss
+
+
+# NOTE on buffer donation: the padded query buffer is freshly allocated
+# per call and dead after the embed, but XLA input-output aliasing (what
+# donate_argnums provides) needs a same-shape/dtype OUTPUT to alias onto —
+# and the serving outputs are three (b,) vectors, never (b, d). Donating
+# would only emit "donated buffers were not usable" warnings on every
+# bucket compile, so the buffer is left to XLA's ordinary liveness
+# analysis, which already reuses it after the embed.
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _predict_padded(pred: Predictor, xs: Array, backend: str):
+    return _predict_core(pred, xs, backend=backend)
+
+
+def bucket_size(b: int, buckets: tuple[int, ...], multiple: int = 1) -> int:
+    """Smallest serving bucket >= b (power-of-two growth past the largest),
+    rounded up to ``multiple`` (mesh divisibility)."""
+    nb = 0
+    for s in sorted(buckets):
+        if b <= s:
+            nb = s
+            break
+    if nb == 0:
+        biggest = max(buckets)
+        nb = biggest * (1 << max(0, math.ceil(math.log2(b / biggest))))
+    return -(-nb // multiple) * multiple
+
+
+# jitted replicated-serving closures, keyed per (mesh, axis, backend) so
+# repeated batches reuse one compilation instead of re-wrapping shard_map
+_SHARDED_CACHE: dict = {}
+
+
+def _sharded_predict_fn(mesh, axis_name: str, backend: str):
+    key = (mesh, axis_name, backend)
+    fn = _SHARDED_CACHE.get(key)
+    if fn is None:
+        from repro.sharding.simplex import replicated_table_serve
+        fn = replicated_table_serve(
+            functools.partial(_predict_core, backend=backend), mesh,
+            axis_name)
+        _SHARDED_CACHE[key] = fn
+    return fn
+
+
+def predict(pred: Predictor, xs: Array, *, backend: str | None = None,
+            mesh=None, axis_name: str = "data") -> ServeResult:
+    """Serve one query batch from the frozen predictor.
+
+    The batch is padded to a fixed bucket (``pred.buckets``) so jit
+    compiles once per bucket, not once per batch shape; the padded buffer
+    is freshly materialized per call and dies after the embed (see the
+    donation note above ``_predict_padded``). Padding rows are served
+    like any query (all identical, so their probes converge) and sliced
+    away before returning. ``mesh`` fans the batch over its ``axis_name``
+    axis with the frozen tables replicated — zero collectives, so
+    throughput scales linearly in devices (DESIGN.md §12).
+    """
+    b, d = xs.shape
+    backend = pred.backend if backend is None else backend
+    ndev = int(mesh.shape[axis_name]) if mesh is not None else 1
+    nb = bucket_size(b, pred.buckets, multiple=ndev)
+    xs_pad = jnp.zeros((nb, d), xs.dtype).at[:b].set(xs)
+    if mesh is None:
+        mean, var, miss = _predict_padded(pred, xs_pad, backend)
+    else:
+        mean, var, miss = _sharded_predict_fn(mesh, axis_name,
+                                              backend)(pred, xs_pad)
+    return ServeResult(mean=mean[:b], var=var[:b], miss_mass=miss[:b])

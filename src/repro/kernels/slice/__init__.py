@@ -1,0 +1,1 @@
+"""Frozen-table slice queries (DESIGN.md §12): the serving-path kernel."""

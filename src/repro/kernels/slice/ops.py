@@ -1,0 +1,91 @@
+"""Serving-slice policy + dispatch for frozen-table queries (DESIGN.md §12).
+
+Mirrors the blur (kernels/blur/ops.py) and build (kernels/hash/ops.py)
+policies: ``auto`` resolves from the platform and the frozen state's VMEM
+footprint, every tier stays explicitly reachable, and off-TPU the Pallas
+kernel dispatches to the XLA fallback unless the interpreter is
+requested.
+
+Backend tiers:
+
+  slice_pallas  one fused pallas_call per query batch: hash probe +
+                dense-row translation + table gather + barycentric
+                contraction with tkeys/row_of_slot/tables VMEM-resident
+                (kernel.py). Engaged on TPU when the frozen state fits
+                the VMEM budget.
+  slice_xla     hash lookup (kernels/hash/ref.py) + gather + einsum —
+                the fallback everywhere else and for oversized tables.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.lattice import LatticeIndex
+from repro.kernels.slice.kernel import slice_query_pallas
+from repro.kernels.slice.ref import slice_query_xla
+
+Array = jax.Array
+
+SLICE_BACKENDS = ("auto", "slice_pallas", "slice_xla")
+
+# VMEM budget for the resident frozen state (key table + row map + value
+# tables), same ceiling discipline as the other kernel policies.
+SERVE_BUDGET_BYTES = 10 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def frozen_vmem_bytes(hcap: int, npk: int, m1: int, c: int,
+                      itemsize: int = 4) -> int:
+    """Resident bytes of the fused query kernel's frozen state."""
+    return itemsize * (hcap * npk + hcap + m1 * c)
+
+
+def choose_slice_backend(*, hcap: int, npk: int, m1: int, c: int,
+                         platform: str | None = None) -> str:
+    """Resolve ``auto`` to a concrete serving backend for this host."""
+    platform = platform or jax.default_backend()
+    if platform == "tpu" and \
+            frozen_vmem_bytes(hcap, npk, m1, c) <= SERVE_BUDGET_BYTES:
+        return "slice_pallas"
+    return "slice_xla"
+
+
+def resolve_slice_backend(backend: str, *, hcap: int = 0, npk: int = 1,
+                          m1: int = 1, c: int = 1) -> str:
+    if backend not in SLICE_BACKENDS:
+        raise ValueError(f"unknown slice backend {backend!r}; want one of "
+                         f"{SLICE_BACKENDS}")
+    if backend == "auto":
+        return choose_slice_backend(hcap=hcap, npk=npk, m1=m1, c=c)
+    return backend
+
+
+def slice_query(index: LatticeIndex, tables: Array, q_packed: Array,
+                weights: Array, active: Array, *, backend: str = "auto",
+                interpret: bool | None = None) -> tuple[Array, Array]:
+    """Slice frozen ``tables`` at embedded queries -> (out (b, c), miss (b,)).
+
+    ``q_packed`` is query-major ((b*(d+1), npk) packed vertex keys),
+    ``weights`` the (b, d+1) barycentric weights, ``active`` a per-vertex
+    validity mask (False forces a miss — padding rows, pack-overflowed
+    queries). Misses contribute zero and their barycentric mass comes
+    back as the per-query slice-miss diagnostic.
+    """
+    m1, c = tables.shape
+    resolved = resolve_slice_backend(backend, hcap=index.hcap,
+                                     npk=index.tkeys.shape[1], m1=m1, c=c)
+    if resolved == "slice_pallas":
+        run_interp = interpret if interpret is not None else False
+        if _on_tpu() or run_interp:
+            return slice_query_pallas(index.tkeys, index.row_of_slot,
+                                      tables, q_packed, weights, active,
+                                      interpret=run_interp)
+    return slice_query_xla(index.tkeys, index.row_of_slot, tables,
+                           q_packed, weights, active, index.hcap)
+
+
+__all__ = ["SLICE_BACKENDS", "SERVE_BUDGET_BYTES", "choose_slice_backend",
+           "resolve_slice_backend", "frozen_vmem_bytes", "slice_query"]

@@ -1,0 +1,60 @@
+"""XLA reference/fallback for frozen-table slice queries (DESIGN.md §12).
+
+The serving hot path: each query point was embedded into its enclosing
+simplex (d+1 packed vertex keys + barycentric weights) and now needs the
+barycentric contraction of FROZEN per-lattice-point tables at those
+vertices. Per query that is
+
+  * d+1 hash probes against the lattice index (``kernels/hash``'s
+    gather-only lookup — an empty slot proves absence),
+  * d+1 gathers from the dense (m+1, c) table,
+  * one (d+1) x c contraction,
+
+with NO build, NO solve, and NO collective — the whole point of the
+frozen serving path. Vertices absent from the index land on the zero row
+``m`` and contribute nothing (standard permutohedral slicing semantics);
+their barycentric mass is returned per query as the slice-miss fidelity
+diagnostic (0 = the query's simplex is fully inside the frozen lattice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hash.ref import hash_lookup_xla
+
+Array = jax.Array
+
+
+def slice_query_xla(tkeys: Array, row_of_slot: Array, tables: Array,
+                    q_packed: Array, weights: Array, active: Array,
+                    hcap: int) -> tuple[Array, Array]:
+    """Slice frozen ``tables`` at embedded queries.
+
+    Args:
+      tkeys: (hcap, npk) int32 materialized key table (empty -> sentinel).
+      row_of_slot: (hcap,) int32 hash slot -> dense row; misses use ``m``.
+      tables: (m+1, c) frozen values; row m is the zero miss row.
+      q_packed: (b*(d+1), npk) packed vertex keys, query-major.
+      weights: (b, d+1) barycentric weights (nonnegative, sum to 1).
+      active: (b*(d+1),) bool — False vertices are forced misses (used
+        for padding rows and pack-overflowed queries).
+
+    Returns:
+      out: (b, c) sliced table values.
+      miss: (b,) barycentric mass on absent/inactive vertices, in [0, 1].
+    """
+    b, dp1 = weights.shape
+    m = tables.shape[0] - 1
+    hres = hash_lookup_xla(tkeys, q_packed, active, hcap)
+    row = jnp.where(hres >= 0,
+                    jnp.take(row_of_slot, jnp.clip(hres, 0, hcap - 1)),
+                    m)
+    vals = jnp.take(tables, row, axis=0).reshape(b, dp1, -1)
+    out = jnp.einsum("bkc,bk->bc", vals, weights.astype(tables.dtype))
+    missed = (row == m).reshape(b, dp1)
+    # clip: f32 barycentric weights sum to 1 +/- eps, and the documented
+    # contract (and the fully-in-lattice miss == 0 exactness) is [0, 1]
+    miss = jnp.clip(
+        jnp.sum(weights * missed.astype(weights.dtype), axis=1), 0.0, 1.0)
+    return out, miss

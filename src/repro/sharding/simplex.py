@@ -147,6 +147,40 @@ def sharded_lattice_mvm(lat: Lattice, v: Array, weights: Array | None = None,
 
 
 # ---------------------------------------------------------------------------
+# Replicated-table serving contract (DESIGN.md §12).
+# ---------------------------------------------------------------------------
+# The frozen serving path inverts the training MVM's sharding economics:
+# training shards the n data rows and replicates the small value table with
+# ONE psum per MVM, but a frozen-predictor query touches no shared
+# accumulator at all — every query is an independent hash-probe + gather +
+# contraction against immutable tables. So the serving contract is:
+#
+#   frozen state (hash index + value tables + hyperparameters) REPLICATED,
+#   query rows SHARDED over the data axis, outputs sharded the same way,
+#   ZERO collectives (assert with ``collective_counts``).
+#
+# Throughput therefore scales linearly in devices for batches that divide
+# the axis (gp/serve.predict pads its buckets to the axis size). Keeping
+# the tables replicated is cheap for the same reason the blur table is:
+# they hold m + 1 <= cap + 1 rows, a small fraction of n(d+1) in practice.
+
+
+def replicated_table_serve(fn, mesh: Mesh, axis_name: str = "data"):
+    """Wrap ``fn(frozen_state, queries) -> per-query outputs`` for
+    replicated-table serving: returns a JITTED callable with the frozen
+    state replicated, query rows sharded over ``axis_name``, and every
+    output sharded the same way. ``fn`` must be embarrassingly parallel
+    over query rows (no cross-query reductions) — which is exactly what
+    the frozen slice path is."""
+    # check_rep=False: the body's probe while_loop has no replication rule
+    # in this jax version; replication is by construction here (the frozen
+    # state is P() everywhere and nothing reduces across queries).
+    sharded = shard_map(fn, mesh=mesh, in_specs=(P(), P(axis_name)),
+                        out_specs=P(axis_name), check_rep=False)
+    return jax.jit(sharded)
+
+
+# ---------------------------------------------------------------------------
 # Collective-count inspection (the one-psum contract).
 # ---------------------------------------------------------------------------
 

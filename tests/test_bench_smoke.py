@@ -85,3 +85,35 @@ def test_build_bench_smoke(rng):
     assert ph["embed_s"] > 0
     assert set(ph["sort"]) == {"dedup_s", "neighbor_s"}
     assert set(ph["hash"]) == {"dedup_s", "neighbor_s", "plan_s"}
+
+
+@pytest.mark.bench_smoke
+def test_serve_bench_smoke(rng):
+    """benchmarks/fig_serve.py's measurement path at tiny size: freeze +
+    predict + the posterior baseline all run, the row carries every field
+    BENCH_serve.json reports, and the fidelity invariants hold (tight-tol
+    parity, zero in-lattice miss, off-lattice miss in [0, 1])."""
+    from benchmarks.fig_serve import measure_serve
+
+    n, d, bq = 200, 3, 32
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=n), jnp.float32)
+    xs_out = jnp.asarray(rng.normal(size=(bq, d)) * 2.0, jnp.float32)
+    row = measure_serve(x, y, x[:bq], xs_out, variance_rank=6)
+    assert row["n"] == n and row["bq"] == bq
+    assert row["freeze_s"] > 0 and row["serve_s"] > 0
+    assert row["posterior_s"] > 0 and row["speedup"] > 1
+    assert row["mean_parity"] <= 1e-4  # tiny-size band; 1e-5 at bench size
+    assert row["miss_in_lattice"] == 0.0
+    off = row["offlattice"]
+    assert 0.0 <= off["mean_miss"] <= 1.0 and 0.0 <= off["max_miss"] <= 1.0
+
+
+@pytest.mark.bench_smoke
+def test_trend_check_runs_clean():
+    """The CI trend gate parses every committed artifact and exits 0 (its
+    fail-soft contract); a malformed BENCH_*.json fails here in tier-1
+    instead of only annotating a CI run."""
+    from benchmarks.trend_check import main
+
+    assert main([]) == 0

@@ -379,3 +379,46 @@ def test_suggest_capacity_vmem_aware_rounding():
     assert cap_big == min(1 << (max(1024, int(big_n * 9 / 8.0))
                                 - 1).bit_length(),
                           default_capacity(big_n, 8))
+
+
+def test_estimate_m_exact_on_full_sample(rng):
+    """With sample >= n the estimator degenerates to an exact count."""
+    from repro.core.lattice import build_lattice_auto, estimate_m
+
+    z = jnp.asarray(rng.normal(size=(400, 3)), jnp.float32)
+    lat = build_lattice_auto(z, spacing=1.0, r=1)
+    assert estimate_m(z, 1.0, sample=400) == int(lat.m)
+
+
+def test_suggest_capacity_data_aware_tightens(rng):
+    """The subsample-insert estimate right-sizes the cap on clustered
+    data (where the constant-occupancy guess over-allocates heavily) and
+    still covers the true m; the blind guess is unchanged without z."""
+    from repro.core.lattice import (build_lattice_auto, default_capacity,
+                                    suggest_capacity)
+
+    n, d = 2000, 4
+    # tightly clustered: very few occupied lattice points
+    z = jnp.asarray(rng.normal(size=(n, d)) * 0.05, jnp.float32)
+    lat = build_lattice_auto(z, spacing=1.0, r=1)
+    m = int(lat.m)
+    cap_blind = suggest_capacity(n, d, 1.0)
+    cap_data = suggest_capacity(n, d, 1.0, z=z)
+    assert m <= cap_data <= cap_blind
+    assert cap_data < cap_blind  # actually tighter on this data
+    assert cap_data <= default_capacity(n, d)
+    # auto build (which now threads z through) lands on the tight cap
+    assert lat.cap == cap_data
+    assert not bool(lat.overflow)
+
+
+def test_suggest_capacity_data_aware_underestimate_recovers(rng):
+    """A low estimate is harmless: build_lattice_auto's grow-and-retry
+    catches the overflow. (Sparse data where a small subsample badly
+    under-predicts fresh-vertex growth.)"""
+    from repro.core.lattice import build_lattice_auto
+
+    z = jnp.asarray(rng.normal(size=(3000, 4)) * 3.0, jnp.float32)
+    lat = build_lattice_auto(z, spacing=0.5, r=1)
+    assert not bool(lat.overflow)
+    assert lat.cap >= int(lat.m)
