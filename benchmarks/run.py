@@ -13,7 +13,7 @@ import time
 import traceback
 
 from benchmarks import (fig4_mvm_error, fig6_mvm_speed, fig_build,
-                        fig_scaling, fig_serve, fig_train_step,
+                        fig_scaling, fig_serve, fig_soak, fig_train_step,
                         roofline_report, table2_uci, table3_sparsity,
                         table4_cg)
 
@@ -25,6 +25,7 @@ MODULES = {
     "fig_train": fig_train_step,
     "fig_scaling": fig_scaling,
     "fig_serve": fig_serve,
+    "fig_soak": fig_soak,
     "table4": table4_cg,
     "table2": table2_uci,
     "roofline": roofline_report,

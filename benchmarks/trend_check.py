@@ -1,18 +1,29 @@
-"""Fail-soft trend check over the committed BENCH_*.json artifacts (CI).
+"""Trend check over the committed BENCH_*.json artifacts (CI gate).
 
 The benchmark artifacts are committed alongside the code so the perf
 trajectory is reviewable per PR; this check keeps them honest without
 making CI flaky: it validates the SCALE-FREE invariants each artifact
-claims (speedup floors, parity/error ceilings, structural fields) inside
-tolerance bands. Absolute times are deliberately not compared — CI hosts
-differ wildly from the machines the artifacts were measured on; ratios
-and error bounds are host-portable.
+claims (speedup floors, parity/error ceilings, availability/validity of
+the serving soak, structural fields) inside tolerance bands. Absolute
+times are deliberately not compared — CI hosts differ wildly from the
+machines the artifacts were measured on; ratios and error bounds are
+host-portable.
 
-Fail-soft contract: band violations print GitHub ``::warning::``
-annotations and the process still exits 0 — the trend gate informs, the
-tier-1 tests enforce. Only a malformed/unreadable artifact (or
-``--strict``) exits nonzero, because that means the artifact pipeline
-itself broke.
+Two tiers:
+
+  ENFORCED   the serving-path artifacts (serve, build, soak) — their
+             invariants are acceptance criteria (zero invalid soak
+             responses, the 20x serving speedup floor, hash-build
+             sanity), so a violation prints a GitHub ``::error::``
+             annotation and the process exits nonzero.
+  ADVISORY   the research-figure artifacts (mvm, train) — violations
+             print ``::warning::`` and do not fail the run (their bands
+             inform; the tier-1 tests enforce their code paths).
+
+A malformed/unreadable artifact always exits nonzero — that means the
+artifact pipeline itself broke. ``--strict`` escalates advisory
+warnings to failures. With healthy artifacts the exit code is 0 (the
+tier-1 ``test_trend_check_runs_clean`` pins that contract).
 
     PYTHONPATH=src python -m benchmarks.trend_check [--strict]
 """
@@ -24,9 +35,9 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
-# (artifact, description, check) — check(payload) yields warning strings.
-# Bands are deliberately generous: they catch order-of-magnitude breaks
-# and sign flips, not single-digit-percent noise.
+# check(payload) yields violation strings; bands are deliberately
+# generous: they catch order-of-magnitude breaks and sign flips, not
+# single-digit-percent noise.
 
 
 def _check_build(p):
@@ -59,6 +70,37 @@ def _check_serve(p):
             yield f"fig_serve {tag}: off-lattice miss mass outside [0, 1]"
 
 
+def _check_soak(p):
+    """The DESIGN.md §13 acceptance invariants of the fault-schedule soak."""
+    row = p["soak"]
+    r, t = row["refresh"], row["traffic"]
+    tag = f"n{row['n']}_d{row['d']}"
+    if t["invalid_responses"] != 0:
+        yield (f"fig_soak {tag}: {t['invalid_responses']} invalid "
+               "response(s) served — the zero-invalid guarantee broke")
+    if t["availability"] < 0.98:
+        yield (f"fig_soak {tag}: availability {t['availability']} < 0.98 "
+               "under the scripted fault schedule")
+    if r["ok"] < 1:
+        yield f"fig_soak {tag}: no refresh ever published (ok={r['ok']})"
+    if r["warm_speedup"] < 1.0:
+        yield (f"fig_soak {tag}: warm refresh no faster than cold "
+               f"(speedup={r['warm_speedup']})")
+    if r["wedged"] < 1 or r["rejected"] < 1:
+        yield (f"fig_soak {tag}: scripted degradation not exercised "
+               f"(wedged={r['wedged']}, rejected={r['rejected']})")
+    fired = {(f["site"], f["kind"]) for f in row["faults"]}
+    missing = {("refresh", "exception"), ("freeze", "cg_stall"),
+               ("freeze", "nan_tables"), ("freeze", "overflow"),
+               ("freeze", "slow")} - fired
+    if missing:
+        yield (f"fig_soak {tag}: scheduled fault(s) never fired: "
+               f"{sorted(missing)}")
+    if row["final_status"] != "ok":
+        yield (f"fig_soak {tag}: engine did not recover to 'ok' "
+               f"(final_status={row['final_status']})")
+
+
 def _check_mvm(p):
     for row in p.get("sizes", []):
         for k, v in row.items():
@@ -76,9 +118,13 @@ def _check_train(p):
                        f"{shared[k]} > 1 — the §9 contract broke")
 
 
-CHECKS = [
+ENFORCED = [
     ("BENCH_build.json", _check_build),
     ("BENCH_serve.json", _check_serve),
+    ("BENCH_soak.json", _check_soak),
+]
+
+ADVISORY = [
     ("BENCH_mvm.json", _check_mvm),
     ("BENCH_train.json", _check_train),
 ]
@@ -86,25 +132,28 @@ CHECKS = [
 
 def main(argv=None) -> int:
     strict = "--strict" in (argv if argv is not None else sys.argv[1:])
-    warnings, malformed = [], []
-    for name, check in CHECKS:
-        path = ROOT / name
-        if not path.exists():
-            # artifacts are optional until their benchmark has run once
-            print(f"trend_check: {name} not committed yet — skipped")
-            continue
-        try:
-            payload = json.loads(path.read_text())
-            warnings.extend(check(payload))
-        except (json.JSONDecodeError, KeyError, TypeError) as e:
-            malformed.append(f"{name}: {type(e).__name__}: {e}")
+    errors, warnings, malformed = [], [], []
+    for tier, out in ((ENFORCED, errors), (ADVISORY, warnings)):
+        for name, check in tier:
+            path = ROOT / name
+            if not path.exists():
+                # artifacts are optional until their benchmark has run once
+                print(f"trend_check: {name} not committed yet — skipped")
+                continue
+            try:
+                payload = json.loads(path.read_text())
+                out.extend(check(payload))
+            except (json.JSONDecodeError, KeyError, TypeError) as e:
+                malformed.append(f"{name}: {type(e).__name__}: {e}")
     for w in warnings:
         print(f"::warning title=benchmark trend::{w}")
+    for e in errors:
+        print(f"::error title=benchmark invariant::{e}")
     for m in malformed:
         print(f"::error title=malformed benchmark artifact::{m}")
-    print(f"trend_check: {len(warnings)} warning(s), "
-          f"{len(malformed)} malformed artifact(s)")
-    if malformed or (strict and warnings):
+    print(f"trend_check: {len(errors)} error(s), {len(warnings)} "
+          f"warning(s), {len(malformed)} malformed artifact(s)")
+    if errors or malformed or (strict and warnings):
         return 1
     return 0
 

@@ -1,7 +1,11 @@
-"""Minimal frozen-lattice serving walkthrough (DESIGN.md §12).
+"""Minimal serving walkthrough: freeze once, then run the engine.
 
 Train once, freeze once, then serve query batches at O(d^2) per query —
-no lattice build, no CG solve, cost independent of n.
+no lattice build, no CG solve, cost independent of n (DESIGN.md §12).
+The second half runs the same Predictor through the fault-tolerant
+serving engine (DESIGN.md §13): queries against a hot-swappable
+registry, warm background refreshes when new data lands, health/
+staleness reporting.
 
     PYTHONPATH=src python examples/serve_minimal.py
 """
@@ -14,6 +18,7 @@ import numpy as np
 from repro.gp import (GPParams, SimplexGP, SimplexGPConfig, fit, freeze,
                       posterior)
 from repro.gp.serve import predict
+from repro.launch import EngineConfig, GPServeEngine
 
 # --- data: a smooth function of 4 inputs + noise ---------------------------
 rng = np.random.default_rng(0)
@@ -36,7 +41,9 @@ pred = freeze(model, params, x_tr, y_tr, key=jax.random.PRNGKey(0),
               variance_rank=20)
 print(f"freeze: {time.perf_counter() - t0:.2f}s  "
       f"(tables {pred.tables.shape}, {pred.tables.nbytes / 1024:.0f} KB, "
-      f"hash index {pred.index.hcap} slots)")
+      f"hash index {pred.index.hcap} slots, "
+      f"CG converged={bool(pred.cg_converged)} "
+      f"in {int(pred.cg_iterations)} iters)")
 
 # --- serve: batches pad to fixed buckets; first call per bucket compiles ---
 queries = jnp.asarray(rng.normal(size=(200, d)), jnp.float32)
@@ -49,15 +56,10 @@ print(f"serve: {dt * 1e3:.2f} ms / {queries.shape[0]} queries "
 
 # miss_mass is the fidelity diagnostic: barycentric weight on lattice
 # vertices the frozen model never saw. 0 = fully in-lattice; near 1 =
-# the prediction is mostly prior. Alert on it in a real deployment.
+# the prediction is mostly prior. The engine below tracks it for you.
 frac_clean = float(jnp.mean((out.miss_mass == 0).astype(jnp.float32)))
 print(f"miss_mass: {frac_clean:.0%} of queries fully in-lattice, "
       f"mean mass {float(jnp.mean(out.miss_mass)):.3f}")
-
-# predictive-y variance adds the learned noise
-pred_var = out.var + pred.noise
-print(f"mean[:4]  {np.asarray(out.mean[:4]).round(3)}")
-print(f"var[:4]   {np.asarray(pred_var[:4]).round(3)}")
 
 # --- sanity: the frozen path tracks the full posterior ---------------------
 # The gap at the DEFAULT eval tolerance is dominated by CG stopping noise
@@ -71,3 +73,26 @@ gap = np.abs(np.asarray(out.mean) - np.asarray(post.mean))[clean]
 print(f"frozen vs posterior mean gap on in-lattice queries: "
       f"max {gap.max():.2e}  (~cg_tol_eval; see BENCH_serve.json "
       "mean_parity for the converged-CG figure)")
+
+# --- the serving engine: hot swaps, warm refreshes, health -----------------
+# In production you run the engine, not bare predict(): it validates
+# every candidate before publishing, retries transient query faults,
+# serves full-miss queries from the prior, and keeps the last-good
+# Predictor serving if a refresh fails or wedges (launch/serve_gp.py).
+with GPServeEngine(model, params, x_tr, y_tr, key=jax.random.PRNGKey(1),
+                   config=EngineConfig(variance_rank=20)) as eng:
+    res = eng.query(queries)
+    print(f"engine: version {res.version} served {queries.shape[0]} "
+          f"queries, {int(res.fallback.sum())} from the prior-fallback "
+          f"lane, stale={res.stale}")
+
+    # new observations arrive: a y-only refresh rides the warm lane
+    # (cached lattice, reused hash index, CG warm-started from the old
+    # alpha) and hot-swaps atomically — in-flight queries are untouched
+    y_new = y_tr + 0.05 * jnp.sin(x_tr[:, 0])
+    eng.submit_refresh(y=y_new)
+    eng.refresh_now()  # or background=True for a worker thread
+    h = eng.health()
+    print(f"refresh: version {eng.version} in {h.last_refresh_s * 1e3:.0f} "
+          f"ms (warm; CG {int(eng.predictor().cg_iterations)} iters), "
+          f"status={h.status}, staleness={h.staleness:.3f}")

@@ -6,10 +6,12 @@ from repro.gp.predict import Posterior, cross_mvm, nll, posterior, rmse
 # attribute ``repro.gp.predict`` must stay the submodule above, not a
 # function shadowing it. Serving call sites use
 # ``from repro.gp.serve import predict``.
-from repro.gp.serve import Predictor, ServeResult, freeze
+from repro.gp.serve import (Predictor, ServeResult, ValidationReport,
+                            freeze, refreeze, validate_predictor)
 from repro.gp.train import TrainResult, fit
 
 __all__ = ["GPParams", "SimplexGP", "SimplexGPConfig", "MLLResult",
            "mll_value_and_grad", "Posterior", "cross_mvm", "nll",
            "posterior", "rmse", "TrainResult", "fit", "Predictor",
-           "ServeResult", "freeze"]
+           "ServeResult", "ValidationReport", "freeze", "refreeze",
+           "validate_predictor"]

@@ -39,13 +39,14 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import filtering
 from repro.core import lattice as lat_mod
 from repro.core.filtering import LatticeCache
 from repro.core.lattice import LatticeIndex
 from repro.gp.models import GPParams, SimplexGP
-from repro.solvers.cg import cg as cg_solve
+from repro.solvers.cg import cg_while as cg_solve
 from repro.solvers.lanczos import lanczos as lanczos_run
 
 Array = jax.Array
@@ -60,6 +61,15 @@ class Predictor:
     columns 1..k are the LOVE variance channels (os * blurred splat of the
     root R), so var = outputscale - sum_j table_j(x*)^2. A pytree — safe
     to pass through jit, replicate across a mesh, or checkpoint.
+
+    Beyond the query tables, a Predictor carries what the serving RUNTIME
+    (DESIGN.md §13) needs: the raw ``alpha`` solution so the next refresh
+    can warm-start its CG solve, and the solve diagnostics
+    (``cg_converged``/``cg_residual``/``cg_iterations``) so the
+    ``validate_predictor`` publication gate can refuse a candidate whose
+    solve silently failed. All are DATA fields — re-freezing never changes
+    the treedef, so bucket compilations survive hot swaps whenever the
+    array shapes (n, m, k) are unchanged.
     """
 
     index: LatticeIndex  # hash index over the frozen train lattice
@@ -67,6 +77,10 @@ class Predictor:
     lengthscale: Array  # (d,)
     outputscale: Array  # ()
     noise: Array  # () — for predictive-y variance (latent var + noise)
+    alpha: Array  # (n,) K_hat^{-1} y — the warm-start seed for refreeze
+    cg_converged: Array  # () bool: alpha solve hit tolerance
+    cg_residual: Array  # () final relative residual of the alpha solve
+    cg_iterations: Array  # () int32 iterations the alpha solve used
     spacing: float = dataclasses.field(metadata=dict(static=True))
     backend: str = dataclasses.field(default="auto",
                                      metadata=dict(static=True))
@@ -83,16 +97,24 @@ class ServeResult(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=("model", "variance_rank"))
 def _freeze_tables(model: SimplexGP, params: GPParams, lat, x: Array,
-                   y: Array, key: Array, variance_rank: int) -> Array:
-    """alpha + LOVE-root solves and the one batched splat->blur sweep."""
+                   y: Array, key: Array, variance_rank: int,
+                   x0: Array | None = None):
+    """alpha + LOVE-root solves and the one batched splat->blur sweep.
+
+    Returns ``(tables, alpha, cg_info)`` — the solve diagnostics ride out
+    so ``freeze`` can record them on the Predictor (the publication gate
+    refuses silently-failed solves). ``x0`` warm-starts the alpha CG from
+    a previous Predictor's solution; the early-exit solver then pays only
+    the iterations the data CHANGE needs, not a cold solve.
+    """
     cfg = model.config
     st = model.stencil
     n = x.shape[0]
     _, os_, _ = model.constrained(params)
     op = model.operator(params, x, lat=lat)
 
-    u, _ = cg_solve(op.mvm, y[:, None], tol=cfg.cg_tol_eval,
-                    max_iters=cfg.max_cg_iters)
+    u, cg_info = cg_solve(op.mvm, y[:, None], tol=cfg.cg_tol_eval,
+                          max_iters=cfg.max_cg_iters, x0=x0)
 
     # LOVE basis — the same y-seeded Lanczos run ``posterior`` does
     q0 = y[:, None] + 1e-3 * jax.random.normal(key, (n, 1), x.dtype)
@@ -118,12 +140,15 @@ def _freeze_tables(model: SimplexGP, params: GPParams, lat, x: Array,
     blurred = lat_mod.blur(lat, table, w)
     if cfg.symmetrize:
         blurred = 0.5 * (blurred + lat_mod.blur(lat, table, w, reverse=True))
-    return os_ * blurred  # (cap+1, 1+k)
+    return os_ * blurred, u[:, 0], cg_info  # (cap+1, 1+k), (n,), info
 
 
 def freeze(model: SimplexGP, params: GPParams, x: Array, y: Array, *,
            key: Array, variance_rank: int = 30, cap: int | None = None,
-           cache: LatticeCache | None = None) -> Predictor:
+           cache: LatticeCache | None = None,
+           warm_start: Array | None = None,
+           reuse_index: LatticeIndex | None = None,
+           on_nonconverged: str = "flag") -> Predictor:
     """Freeze a trained model into an immutable serving ``Predictor``.
 
     One-time cost (amortized over every future query): a train-lattice
@@ -131,6 +156,16 @@ def freeze(model: SimplexGP, params: GPParams, x: Array, y: Array, *,
     alpha/LOVE solves, one batched blur sweep, and the hash-index build.
     Eager-only: the dense tables are sized by the CONCRETE occupied count
     m, which is what keeps them small enough to stay VMEM-resident.
+
+    Refresh hooks (used by ``refreeze``/the serving engine): ``warm_start``
+    seeds the alpha CG with a previous solution (valid for ANY seed — CG
+    converges regardless; a good seed from an old Predictor just makes it
+    exit early). ``reuse_index`` skips the eager hash-index rebuild when
+    the lattice is unchanged (a y-only refresh); it is VERIFIED against
+    the freshly built lattice's occupied slots and silently rebuilt on
+    mismatch — never trusted. ``on_nonconverged``: "flag" records the
+    failed solve in the diagnostics (the ``validate_predictor`` gate
+    refuses it at publication time); "raise" fails fast here.
     """
     cfg = model.config
     st = model.stencil
@@ -156,14 +191,145 @@ def freeze(model: SimplexGP, params: GPParams, x: Array, y: Array, *,
         raise RuntimeError("freeze: lattice capacity overflow — pass a "
                            "larger cap (or let build_lattice_auto size it)")
 
-    blurred = _freeze_tables(model, params, lat, x, y, key, variance_rank)
-    index = lat_mod.lattice_index(lat)
+    x0 = None
+    if warm_start is not None and warm_start.shape[0] == x.shape[0]:
+        x0 = jnp.asarray(warm_start, x.dtype)[:, None]
+    blurred, alpha, cg_info = _freeze_tables(model, params, lat, x, y, key,
+                                             variance_rank, x0)
+    converged = bool(jnp.all(cg_info.converged))
+    if not converged and on_nonconverged == "raise":
+        raise RuntimeError(
+            "freeze: alpha CG solve did not converge "
+            f"(relative residual {float(jnp.max(cg_info.residual_norms)):.2e}"
+            f" > tol {cfg.cg_tol_eval} after "
+            f"{int(cg_info.iterations)} iterations)")
+    index = _verified_index(lat, reuse_index)
     tables = lat_mod.compact_table(index, blurred)
     return Predictor(index=index, tables=tables, lengthscale=ls,
-                     outputscale=os_, noise=noise, spacing=st.spacing,
+                     outputscale=os_, noise=noise, alpha=alpha,
+                     cg_converged=jnp.asarray(converged),
+                     cg_residual=jnp.max(cg_info.residual_norms),
+                     cg_iterations=cg_info.iterations,
+                     spacing=st.spacing,
                      backend=cfg.serve_backend,
                      buckets=tuple(cfg.serve_buckets),
                      n_train=x.shape[0])
+
+
+def _verified_index(lat, reuse_index: LatticeIndex | None) -> LatticeIndex:
+    """``reuse_index`` if it provably indexes ``lat``, else a fresh build.
+
+    Reuse is only sound if BOTH maps still hold against the freshly built
+    lattice: (a) ``slots`` (dense row -> lattice slot, what
+    ``compact_table`` gathers with) must land on exactly the occupied
+    slots, and (b) each dense row's PACKED COORDINATES in the index's
+    probe table must equal the new lattice's coordinates at that slot.
+    Slot ids alone are NOT enough: the hash build numbers slots by
+    placement order, so two builds of different capacity can occupy the
+    identical slot-id set 0..m-1 with different coord->slot assignments —
+    an id-level check would pass and silently serve permuted rows. The
+    key-level check makes a stale index impossible to reuse; on any
+    mismatch a fresh index is built (never an error — reuse is an
+    optimization, not a contract).
+    """
+    if reuse_index is None:
+        return lat_mod.lattice_index(lat)
+    occupied = np.nonzero(np.asarray(lat.valid))[0]
+    slots = np.asarray(reuse_index.slots)
+    if (reuse_index.m != occupied.shape[0]
+            or not np.array_equal(np.sort(slots), occupied)):
+        return lat_mod.lattice_index(lat)
+    # (b) packed keys of the new lattice at the index's slots, per dense row
+    coords = jnp.asarray(np.asarray(lat.coords)[slots])
+    packed_new = np.stack(
+        [np.asarray(c) for c in lat_mod._pack_key_cols(coords)], axis=1)
+    ros = np.asarray(reuse_index.row_of_slot)
+    tkeys = np.asarray(reuse_index.tkeys)
+    occ = ros < reuse_index.m
+    if int(occ.sum()) != reuse_index.m:
+        return lat_mod.lattice_index(lat)
+    packed_idx = np.zeros_like(packed_new)
+    packed_idx[ros[occ]] = tkeys[occ]
+    if not np.array_equal(packed_idx, packed_new):
+        return lat_mod.lattice_index(lat)
+    return reuse_index
+
+
+def refreeze(model: SimplexGP, params: GPParams, x: Array, y: Array, *,
+             key: Array, old: Predictor, cache: LatticeCache | None = None,
+             variance_rank: int | None = None, cap: int | None = None,
+             on_nonconverged: str = "flag") -> Predictor:
+    """Warm-started re-freeze for a data refresh (DESIGN.md §13).
+
+    The incremental path ROADMAP item 1 calls for: seed the alpha CG from
+    ``old.alpha`` (early-exit solver — a y-perturbation refresh pays a
+    few iterations, not a cold solve) and offer ``old.index`` for reuse
+    (verified inside ``freeze``; a y-only update leaves the lattice — and
+    hence the index — unchanged, skipping the eager hash-index rebuild).
+    Produces the SAME Predictor a cold ``freeze`` on (x, y) would, up to
+    CG stopping noise — pinned to 1e-5 by tests/test_serve_engine.py.
+
+    Pass the engine's ``cache`` so an unchanged (x, lengthscale) hits the
+    memoized lattice instead of rebuilding. ``variance_rank`` defaults to
+    the old Predictor's rank (table shapes stay stable -> no bucket
+    recompiles after the hot swap).
+    """
+    if variance_rank is None:
+        variance_rank = old.tables.shape[1] - 1
+    warm = old.alpha if old.n_train == x.shape[0] else None
+    return freeze(model, params, x, y, key=key, variance_rank=variance_rank,
+                  cap=cap, cache=cache, warm_start=warm,
+                  reuse_index=old.index, on_nonconverged=on_nonconverged)
+
+
+class ValidationReport(NamedTuple):
+    ok: bool
+    failures: tuple[str, ...]
+
+
+def validate_predictor(pred: Predictor, *,
+                       require_converged: bool = True) -> ValidationReport:
+    """The publication gate: is this Predictor safe to serve?
+
+    Runs host-side on the CANDIDATE before it is swapped in (never on the
+    query path), so every failure mode it catches is refused before any
+    query can observe it: non-finite tables/alpha (NaN-poisoned solve or
+    buffer), a non-converged alpha solve, an index whose shapes/row map
+    cannot be consistent with the tables, non-positive hyperparameters,
+    and a corrupted zero miss row. Returns every failure, not just the
+    first — the serving engine surfaces the list in its health status.
+    """
+    fails: list[str] = []
+    tables = np.asarray(pred.tables)
+    if not bool(np.isfinite(tables).all()):
+        fails.append("tables contain non-finite values")
+    if not bool(np.isfinite(np.asarray(pred.alpha)).all()):
+        fails.append("alpha solution contains non-finite values")
+    if require_converged and not bool(pred.cg_converged):
+        fails.append(
+            f"alpha CG solve not converged (relative residual "
+            f"{float(pred.cg_residual):.2e} after "
+            f"{int(pred.cg_iterations)} iterations)")
+    if tables.shape[0] != pred.index.m + 1:
+        fails.append(f"tables have {tables.shape[0]} rows, index expects "
+                     f"m+1={pred.index.m + 1}")
+    row_of_slot = np.asarray(pred.index.row_of_slot)
+    if row_of_slot.shape != (pred.index.hcap,) or (
+            row_of_slot.size and (row_of_slot.min() < 0
+                                  or row_of_slot.max() > pred.index.m)):
+        fails.append("index row_of_slot outside [0, m]")
+    if tables.shape[0] > 0 and not bool((tables[-1] == 0).all()):
+        fails.append("zero miss row is non-zero")
+    ls = np.asarray(pred.lengthscale)
+    if not (bool(np.isfinite(ls).all()) and bool((ls > 0).all())):
+        fails.append("lengthscale not finite-positive")
+    for name in ("outputscale", "noise"):
+        v = float(getattr(pred, name))
+        if not (math.isfinite(v) and v > 0):
+            fails.append(f"{name} not finite-positive ({v})")
+    if not pred.spacing > 0:
+        fails.append(f"spacing not positive ({pred.spacing})")
+    return ValidationReport(ok=not fails, failures=tuple(fails))
 
 
 def _predict_core(pred: Predictor, xs: Array, *, backend: str,

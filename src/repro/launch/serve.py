@@ -16,6 +16,7 @@ examples/lm_serve.py drives this on a reduced config.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax
@@ -37,6 +38,26 @@ class Request:
 class Completion:
     rid: int
     tokens: list
+
+
+class RunReport(list):
+    """``ServeEngine.run``'s return value: the finished completions (it IS
+    the ``done`` list, so existing callers keep working), plus what a
+    step-budget exhaustion left behind — in-flight completions with their
+    partial tokens and still-queued requests. ``exhausted`` is True iff
+    the loop stopped on ``max_steps`` with work remaining; a caller that
+    ignores it sees exactly the old (silently-truncating) behavior, a
+    caller that checks it can re-run or surface the loss."""
+
+    def __init__(self, done, *, in_flight=(), queued=(), exhausted=False):
+        super().__init__(done)
+        self.in_flight: list = list(in_flight)
+        self.queued: list = list(queued)
+        self.exhausted: bool = exhausted
+
+    @property
+    def unfinished(self) -> int:
+        return len(self.in_flight) + len(self.queued)
 
 
 class ServeEngine:
@@ -64,13 +85,32 @@ class ServeEngine:
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def run(self, *, max_steps: int = 10_000) -> list:
+    def run(self, *, max_steps: int = 10_000) -> "RunReport":
+        """Drive the batch until the queue drains or ``max_steps`` runs out.
+
+        Returns a ``RunReport`` — a list of finished ``Completion``s that
+        ADDITIONALLY reports work stranded by an exhausted step budget
+        (``in_flight`` partial completions, ``queued`` requests,
+        ``exhausted`` flag) instead of silently dropping it. Stranded
+        state stays on the engine, so a follow-up ``run()`` resumes it.
+        """
+        exhausted = True
         for _ in range(max_steps):
             if not self._refill() and all(
                     r is None for r in self.slot_req):
+                exhausted = False
                 break
             self._one_step()
-        return self.done
+        in_flight = [r for r in self.slot_req if r is not None]
+        exhausted = exhausted and bool(in_flight or self.queue)
+        if exhausted:
+            warnings.warn(
+                f"ServeEngine.run: step budget ({max_steps}) exhausted with "
+                f"{len(in_flight)} in-flight and {len(self.queue)} queued "
+                "request(s) unfinished — see RunReport.in_flight/.queued",
+                RuntimeWarning, stacklevel=2)
+        return RunReport(self.done, in_flight=in_flight,
+                         queued=list(self.queue), exhausted=exhausted)
 
     # -- internals ---------------------------------------------------------
     def _refill(self) -> bool:

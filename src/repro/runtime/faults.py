@@ -1,0 +1,157 @@
+"""Deterministic fault injection for the serving runtime (DESIGN.md §13).
+
+The fault-tolerance claims of ``launch/serve_gp.GPServeEngine`` — a bad
+candidate is never published, a wedged refresh never blocks queries, an
+overflow refusal recovers with grown capacity — are only claims until a
+harness can *force* each failure on cue and watch the engine degrade
+gracefully. This module is that harness: a scripted schedule of
+``FaultEvent``s that the engine probes at named sites, each firing
+exactly when its per-site occurrence counter matches, so a soak run
+(benchmarks/fig_soak.py) replays the identical failure sequence every
+time and its availability/validity stats are reproducible.
+
+Sites are engine-defined strings (``"refresh"``, ``"freeze"``,
+``"query"``); kinds are the failure modes the serving stack must survive:
+
+  exception    the probe raises ``InjectedFault`` (a refresh worker crash,
+               a transient query-path error)
+  slow         the probe sleeps ``seconds`` (a wedged/straggling freeze —
+               trips the refresh deadline, StepWatchdog-style)
+  nan_tables   candidate Predictor tables poisoned with NaN (a diverged
+               solve / corrupt device buffer) — must be refused by the
+               ``serve.validate_predictor`` gate
+  inf_tables   same, with +inf
+  cg_stall     the refresh solves under a config that cannot converge
+               (forced CG non-convergence) — refused by the gate
+  overflow     the refresh freezes with a deliberately tiny lattice cap,
+               forcing the capacity-overflow refusal the engine must
+               recover from by re-freezing with grown capacity
+
+Every fired event is appended to ``injector.fired`` so benchmarks can
+report the schedule actually exercised. The injector is thread-safe: the
+engine probes it from both the query (caller) thread and the refresh
+worker thread.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an armed ``exception`` event (and nothing else)."""
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One scripted failure.
+
+    ``at`` is the 1-based occurrence of the (site, kind) probe the event
+    fires on — e.g. ``at=3`` on site "refresh" fires on the third refresh
+    — with ``count`` consecutive firings (``count=2`` makes the next
+    probe fail too, which is how a *persistent* failure is scripted vs a
+    transient one). ``at=None`` fires on the very next probe.
+    """
+
+    site: str
+    kind: str  # exception | slow | nan_tables | inf_tables | cg_stall | overflow
+    at: int | None = None
+    count: int = 1
+    seconds: float = 0.0  # for kind="slow"
+    cap: int = 8  # for kind="overflow": the forced (too-small) lattice cap
+    note: str = ""
+
+    _remaining: int = dataclasses.field(default=-1, repr=False)
+
+
+class FaultInjector:
+    """Scripted, thread-safe fault schedule probed by the serving engine.
+
+    The engine calls the ``take``/``maybe_raise``/``sleep_if_armed``/...
+    probes at its sites; an event fires when the site's probe counter for
+    its kind reaches ``at``. A ``None`` injector (the production default)
+    means every probe is a no-op — the engine guards each call site with
+    ``if self._faults is not None``.
+    """
+
+    def __init__(self, events: list[FaultEvent] | tuple[FaultEvent, ...] = ()):
+        self._lock = threading.Lock()
+        self._events: list[FaultEvent] = []
+        self._counts: dict[tuple[str, str], int] = {}
+        self.fired: list[FaultEvent] = []
+        for ev in events:
+            self.arm(ev)
+
+    def arm(self, event: FaultEvent | None = None, /, **kw) -> FaultEvent:
+        """Add an event to the schedule (``arm(FaultEvent(...))`` or
+        ``arm(site="refresh", kind="exception", at=2)``)."""
+        ev = event if event is not None else FaultEvent(**kw)
+        with self._lock:
+            ev._remaining = ev.count
+            self._events.append(ev)
+        return ev
+
+    # -- probes (engine-facing) ---------------------------------------------
+
+    def take(self, site: str, kind: str) -> FaultEvent | None:
+        """Consume one firing of an armed (site, kind) event, if due.
+
+        Increments the (site, kind) probe counter regardless of outcome —
+        scheduling is by how many times the engine ASKED, which is what
+        makes "fail refresh #3" scriptable.
+        """
+        with self._lock:
+            key = (site, kind)
+            self._counts[key] = self._counts.get(key, 0) + 1
+            tick = self._counts[key]
+            for ev in self._events:
+                if ev.site != site or ev.kind != kind or ev._remaining <= 0:
+                    continue
+                if ev.at is None or ev.at <= tick < ev.at + ev.count:
+                    ev._remaining -= 1
+                    self.fired.append(ev)
+                    return ev
+        return None
+
+    def maybe_raise(self, site: str) -> None:
+        ev = self.take(site, "exception")
+        if ev is not None:
+            raise InjectedFault(f"injected exception at {site!r}"
+                                + (f" ({ev.note})" if ev.note else ""))
+
+    def sleep_if_armed(self, site: str) -> float:
+        """Stall the calling thread (a wedged freeze); returns seconds slept."""
+        ev = self.take(site, "slow")
+        if ev is None:
+            return 0.0
+        time.sleep(ev.seconds)
+        return ev.seconds
+
+    def corrupt_tables(self, site: str, tables):
+        """Poison a candidate's value tables with NaN/Inf if armed."""
+        ev = self.take(site, "nan_tables")
+        bad = float("nan")
+        if ev is None:
+            ev = self.take(site, "inf_tables")
+            bad = float("inf")
+        if ev is None:
+            return tables
+        return tables.at[0, 0].set(bad)
+
+    def cg_stall(self, site: str) -> bool:
+        """True if this refresh's CG solve should be forced to stall."""
+        return self.take(site, "cg_stall") is not None
+
+    def forced_cap(self, site: str) -> int | None:
+        """A deliberately undersized lattice cap for this freeze, or None."""
+        ev = self.take(site, "overflow")
+        return None if ev is None else ev.cap
+
+    # -- reporting ----------------------------------------------------------
+
+    def summary(self) -> list[dict]:
+        """JSON-able log of every fired event, in firing order."""
+        with self._lock:
+            return [{"site": ev.site, "kind": ev.kind, "at": ev.at,
+                     "note": ev.note} for ev in self.fired]

@@ -165,6 +165,36 @@ def sharded_lattice_mvm(lat: Lattice, v: Array, weights: Array | None = None,
 # they hold m + 1 <= cap + 1 rows, a small fraction of n(d+1) in practice.
 
 
+# Hot-swap contract (DESIGN.md §13): the serving engine may PUBLISH a new
+# frozen state while traffic is in flight. That is safe under this
+# replicated contract because (a) a Predictor is an immutable pytree — a
+# query batch that grabbed the old reference keeps serving the old
+# version end to end (no torn reads: nothing is mutated in place), and
+# (b) the swap itself is a host-side reference assignment AFTER the
+# candidate has been fully materialized on every device via
+# ``replicate_pytree`` and validated (serve.validate_predictor) — devices
+# never observe a half-transferred table. Per-bucket compilations key on
+# array shapes, not identities, so a swap whose (n, m, k) are unchanged
+# (the y-only refresh path) reuses every compiled bucket.
+
+
+def replicate_pytree(tree, mesh: Mesh):
+    """Place every array leaf of ``tree`` fully replicated on ``mesh``.
+
+    The publish step of the hot-swap contract above: a candidate frozen
+    state is replicated here BEFORE the registry swap, so the first
+    post-swap query pays no lazy per-device transfer (and a transfer
+    failure surfaces at publish time — refusable — instead of on the
+    query path)."""
+    sharding = jax.sharding.NamedSharding(mesh, P())
+
+    def place(leaf):
+        return jax.device_put(leaf, sharding) \
+            if isinstance(leaf, jax.Array) else leaf
+
+    return jax.tree.map(place, tree)
+
+
 def replicated_table_serve(fn, mesh: Mesh, axis_name: str = "data"):
     """Wrap ``fn(frozen_state, queries) -> per-query outputs`` for
     replicated-table serving: returns a JITTED callable with the frozen

@@ -129,6 +129,93 @@ def cg(
     return x, info
 
 
+def cg_while(
+    matvec: MatVec,
+    b: Array,
+    *,
+    precond: MatVec | None = None,
+    tol: float | Array = 1e-2,
+    max_iters: int = 500,
+    min_iters: int = 10,
+    x0: Array | None = None,
+) -> tuple[Array, CGInfo]:
+    """Early-exit CG twin of ``cg`` for WARM-STARTED solves (no SLQ).
+
+    The scan-based ``cg`` runs its static ``max_iters`` trip count even
+    after every column converges (frozen columns just stop updating) —
+    the right trade when the Lanczos coefficients are wanted for SLQ and
+    the solve is cold. A warm-started solve (gp/serve.refreeze seeding
+    from the previous Predictor's alpha) converges in a handful of
+    iterations, so here the loop is a ``lax.while_loop`` that exits as
+    soon as every column is done — the wall-clock win warm starting is
+    for. Columns whose ``x0`` residual is already within ``tol`` start
+    INACTIVE (zero iterations), so a perfect seed costs one matvec.
+
+    Same operator/stopping semantics as ``cg`` (identical iterates while
+    active, same ``min_iters`` refinement floor for active columns); the
+    returned ``CGInfo`` carries real iteration/residual/convergence
+    diagnostics but EMPTY (0, k) Lanczos coefficient arrays — use ``cg``
+    when SLQ needs them.
+    """
+    if b.ndim == 1:
+        raise ValueError("cg_while expects (n, k) column-blocked RHS; "
+                         "got 1-D")
+    minv = precond or _identity_precond
+    n, k = b.shape
+    dt = b.dtype
+
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - matvec(x) if x0 is not None else b
+    z = minv(r)
+    p = z
+    rz = jnp.sum(r * z, axis=0)
+    bnorm = jnp.maximum(jnp.linalg.norm(b, axis=0), 1e-30)
+    tol_arr = jnp.asarray(tol, dt)
+    min_iters = min(min_iters, max_iters)
+    # a cold start must enter the loop even at tol >= 1 (the min_iters
+    # contract); a warm start may skip columns its seed already solved
+    if x0 is None:
+        active0 = jnp.ones((k,), bool)
+    else:
+        active0 = jnp.linalg.norm(r, axis=0) / bnorm > tol_arr
+
+    def cond(state):
+        j, *_rest, active = state
+        return (j < max_iters) & jnp.any(active)
+
+    def body(state):
+        j, x, r, z, p, rz, active = state
+        ap = matvec(p)
+        pap = jnp.sum(p * ap, axis=0)
+        safe_pap = jnp.where(pap > 0, pap, 1.0)
+        alpha = jnp.where(active & (pap > 0), rz / safe_pap, 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = minv(r)
+        rz_new = jnp.sum(r * z, axis=0)
+        safe_rz = jnp.where(rz != 0, rz, 1.0)
+        beta = jnp.where(active, rz_new / safe_rz, 0.0)
+        p = z + beta * p
+        res = jnp.linalg.norm(r, axis=0) / bnorm
+        still = active & ((res > tol_arr) | (j + 1 < min_iters))
+        return (j + 1, x, r, z, p, rz_new, still)
+
+    state = (jnp.zeros((), jnp.int32), x, r, z, p, rz, active0)
+    j, x, r, *_rest = jax.lax.while_loop(cond, body, state)
+
+    res = jnp.linalg.norm(r, axis=0) / bnorm
+    empty = jnp.zeros((0, k), dt)
+    info = CGInfo(
+        iterations=j,
+        residual_norms=res,
+        converged=res <= tol_arr,
+        alphas=empty,
+        betas=empty,
+        valid=jnp.zeros((0, k), bool),
+    )
+    return x, info
+
+
 def lanczos_tridiag_from_cg(info: CGInfo) -> tuple[Array, Array]:
     """Recover symmetric-tridiagonal (diag, offdiag) per column from CG.
 

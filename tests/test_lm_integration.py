@@ -37,6 +37,39 @@ def test_serve_engine_continuous_batching(rng):
         assert all(0 <= t < cfg.vocab_size for t in c.tokens)
 
 
+def test_serve_engine_reports_stranded_work_on_step_exhaustion(rng):
+    """An exhausted step budget must not silently drop work: the run
+    report flags exhaustion, carries the in-flight partials and the
+    still-queued requests, warns — and a follow-up run() resumes the
+    stranded state to completion."""
+    import warnings
+
+    cfg = smoke("llama3.2-3b")
+    lm = build(cfg)
+    params = lm.init_params(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch=2, max_seq=64)
+    for rid in range(4):
+        prompt = np.asarray(rng.integers(0, cfg.vocab_size, 6), np.int32)
+        eng.submit(Request(rid=rid, prompt=prompt, max_new=8))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        report = eng.run(max_steps=3)  # < prefill length: nothing finishes
+    assert report.exhausted
+    assert report.unfinished == len(report.in_flight) + len(report.queued)
+    assert len(report.in_flight) == 2 and len(report.queued) == 2
+    assert len(report) == 0  # a RunReport IS the done list
+    assert any("step budget" in str(w.message) for w in caught)
+
+    # stranded state stays on the engine: a second run finishes the lot
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a clean drain must not warn
+        report2 = eng.run(max_steps=500)
+    assert not report2.exhausted and report2.unfinished == 0
+    assert sorted(c.rid for c in report2) == [0, 1, 2, 3]
+    for c in report2:
+        assert len(c.tokens) == 8
+
+
 def test_serve_engine_greedy_matches_stepwise(rng):
     """Engine greedy decode == manual serve_step loop."""
     cfg = smoke("minitron-4b")

@@ -1,0 +1,391 @@
+"""Fault-tolerant serving runtime (launch/serve_gp.py, DESIGN.md §13).
+
+Pins the degradation contract, failure mode by failure mode: a corrupt
+or non-converged candidate is refused by the ``validate_predictor`` gate
+and the last-good Predictor keeps serving; a wedged refresh is abandoned
+at its deadline and can never publish late; a capacity-overflow refusal
+recovers by re-freezing with grown cap; transient query faults are
+retried inside the per-request budget while persistent ones are refused
+(never answered with garbage); full-miss queries ride the explicit
+prior-fallback lane; and the warm refresh path (cached lattice + reused
+hash index + warm-started CG) is pinned to cold-freeze parity. The
+``bench_smoke`` test replays benchmarks/fig_soak.py's scripted fault
+schedule at tiny size so the whole soak harness runs in tier-1.
+"""
+import dataclasses
+import math
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import filtering
+from repro.gp import (GPParams, SimplexGP, SimplexGPConfig, freeze,
+                      refreeze, validate_predictor)
+from repro.gp.serve import predict
+from repro.launch.serve_gp import (EngineConfig, GPServeEngine,
+                                   RefreshRejected, ServeUnavailable)
+from repro.runtime.faults import FaultInjector, InjectedFault
+
+# the benchmarks package lives at the repo root (not under src/)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+TIGHT = SimplexGPConfig(kernel="matern32", cg_tol_eval=3e-7,
+                        max_cg_iters=400)
+STALL = dataclasses.replace(TIGHT, cg_tol_eval=1e-12, max_cg_iters=2)
+
+
+def _data(rng, n=240, d=3):
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = (jnp.sin(2 * x[:, 0]) + 0.4 * x[:, 1] * x[:, 2]
+         + 0.05 * jnp.asarray(rng.normal(size=n), jnp.float32))
+    return x, y
+
+
+def _engine(rng, n=240, d=3, faults=None, background=False, **cfg_kw):
+    x, y = _data(rng, n, d)
+    model = SimplexGP(TIGHT)
+    params = GPParams.init(d, noise=0.3)
+    cfg = EngineConfig(variance_rank=6, **cfg_kw)
+    eng = GPServeEngine(model, params, x, y, key=jax.random.PRNGKey(0),
+                        config=cfg, faults=faults, background=background)
+    return eng, x, y
+
+
+# -- freeze diagnostics + validation gate (satellite: CGInfo no longer
+# -- dropped on the freeze floor) -------------------------------------------
+
+def test_freeze_records_cg_diagnostics(rng):
+    x, y = _data(rng)
+    params = GPParams.init(3, noise=0.3)
+    pred = freeze(SimplexGP(TIGHT), params, x, y,
+                  key=jax.random.PRNGKey(0), variance_rank=6)
+    assert bool(pred.cg_converged)
+    assert float(pred.cg_residual) <= TIGHT.cg_tol_eval
+    assert int(pred.cg_iterations) > 0
+
+    stalled = freeze(SimplexGP(STALL), params, x, y,
+                     key=jax.random.PRNGKey(0), variance_rank=6)
+    assert not bool(stalled.cg_converged)
+    rep = validate_predictor(stalled)
+    assert not rep.ok and any("not converged" in f for f in rep.failures)
+    # ...unless convergence is explicitly waived (offline experimentation)
+    assert validate_predictor(stalled, require_converged=False).ok
+
+    with pytest.raises(RuntimeError, match="did not converge"):
+        freeze(SimplexGP(STALL), params, x, y, key=jax.random.PRNGKey(0),
+               variance_rank=6, on_nonconverged="raise")
+
+
+def test_validate_predictor_reports_each_corruption(rng):
+    x, y = _data(rng)
+    pred = freeze(SimplexGP(TIGHT), GPParams.init(3, noise=0.3), x, y,
+                  key=jax.random.PRNGKey(0), variance_rank=6)
+    assert validate_predictor(pred).ok
+
+    bad_nan = dataclasses.replace(
+        pred, tables=pred.tables.at[0, 0].set(jnp.nan))
+    rep = validate_predictor(bad_nan)
+    assert not rep.ok and any("non-finite" in f for f in rep.failures)
+
+    bad_alpha = dataclasses.replace(
+        pred, alpha=pred.alpha.at[0].set(jnp.inf))
+    rep = validate_predictor(bad_alpha)
+    assert not rep.ok and any("alpha" in f for f in rep.failures)
+
+    bad_rows = dataclasses.replace(pred, tables=pred.tables[:-2])
+    rep = validate_predictor(bad_rows)
+    assert not rep.ok and any("rows" in f for f in rep.failures)
+
+    bad_miss = dataclasses.replace(
+        pred, tables=pred.tables.at[-1, 0].set(1.0))
+    rep = validate_predictor(bad_miss)
+    assert not rep.ok and any("miss row" in f for f in rep.failures)
+
+    # every failure is reported, not just the first
+    multi = dataclasses.replace(
+        bad_nan, cg_converged=jnp.asarray(False))
+    assert len(validate_predictor(multi).failures) >= 2
+
+
+# -- warm refreeze: parity + index reuse (satellite + tentpole core) --------
+
+def test_warm_refreeze_matches_cold_freeze(rng):
+    """The warm path (cached lattice + reused index + warm-started CG)
+    must agree with a cold freeze of the same data to 1e-5 — both solves
+    converged under the tight config, so the comparison isolates the
+    reuse machinery from CG stopping noise — while doing fewer CG
+    iterations."""
+    x, y = _data(rng, n=300)
+    model = SimplexGP(TIGHT)
+    params = GPParams.init(3, noise=0.3)
+    key = jax.random.PRNGKey(0)
+    cache = filtering.LatticeCache()
+    old = freeze(model, params, x, y, key=key, variance_rank=6, cache=cache)
+
+    y2 = y + 0.05 * jnp.sin(x[:, 0])
+    cold = freeze(model, params, x, y2, key=key, variance_rank=6,
+                  cache=filtering.LatticeCache())
+    warm = refreeze(model, params, x, y2, key=key, old=old, cache=cache)
+
+    assert warm.index is old.index  # same cached lattice: reuse verified
+    assert bool(warm.cg_converged) and bool(cold.cg_converged)
+    assert int(warm.cg_iterations) < int(cold.cg_iterations)
+
+    xs = jnp.concatenate([x[:48], x[:16] + 0.3], axis=0)
+    sw, sc = predict(warm, xs), predict(cold, xs)
+    np.testing.assert_allclose(np.asarray(sw.mean), np.asarray(sc.mean),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sw.var), np.asarray(sc.var),
+                               atol=1e-5)
+
+
+def test_refreeze_rebuilds_index_for_a_different_lattice(rng):
+    """Index reuse is verification-gated, not assumed: when the old
+    Predictor's lattice was built under a different cap (hash placement
+    numbers slots differently), the stale index must be REBUILT — row
+    permutations between numberings would otherwise serve silently
+    permuted tables."""
+    x, y = _data(rng, n=300)
+    model = SimplexGP(TIGHT)
+    params = GPParams.init(3, noise=0.3)
+    key = jax.random.PRNGKey(0)
+    # old: worst-case cap (cache path); new: auto cap (no cache)
+    old = freeze(model, params, x, y, key=key, variance_rank=6,
+                 cache=filtering.LatticeCache())
+    y2 = y + 0.05 * jnp.sin(x[:, 0])
+    warm = refreeze(model, params, x, y2, key=key, old=old, cache=None)
+    cold = freeze(model, params, x, y2, key=key, variance_rank=6)
+    assert warm.index is not old.index
+    np.testing.assert_allclose(np.asarray(predict(warm, x[:48]).mean),
+                               np.asarray(predict(cold, x[:48]).mean),
+                               atol=1e-5)
+
+    # x changed: reuse is structurally impossible, index must rebuild
+    x3 = x + 0.05
+    moved = refreeze(model, params, x3, y2, key=key, old=old,
+                     cache=filtering.LatticeCache())
+    assert moved.index is not old.index
+    assert bool(jnp.all(jnp.isfinite(predict(moved, x3[:16]).mean)))
+
+
+# -- engine: serving + degradation lanes ------------------------------------
+
+def test_engine_serves_and_reports_health(rng):
+    eng, x, y = _engine(rng)
+    res = eng.query(x[:32])
+    assert res.version == 1 and not res.stale
+    assert not bool(res.fallback.any())
+    assert bool(jnp.all(jnp.isfinite(res.mean)))
+    h = eng.health()
+    assert h.status == "ok" and h.version == 1
+    assert h.queries_served == 1 and h.queries_refused == 0
+    assert h.n_train == x.shape[0]
+    assert h.last_refresh_s is not None and h.last_refresh_s > 0
+    # an empty batch is well-formed and must not poison the staleness window
+    empty = eng.query(jnp.zeros((0, x.shape[1]), jnp.float32))
+    assert empty.mean.shape == (0,) and empty.var.shape == (0,)
+    assert math.isfinite(eng.health().staleness)
+    eng.close()
+
+
+def test_engine_warm_refresh_publishes_new_version(rng):
+    eng, x, y = _engine(rng)
+    gen = eng.submit_refresh(y=y + 0.05)
+    assert eng.refresh_now()
+    assert eng.version == 2
+    res = eng.query(x[:16])
+    assert res.version == 2 and not res.stale
+    h = eng.health()
+    assert h.refreshes_ok == 1 and h.status == "ok"
+    # the published predictor reused the cached lattice's index and was
+    # warm-started: same treedef, so bucket compiles survived the swap
+    assert eng.predictor(2).index is eng.predictor(1).index
+    eng.close()
+
+
+def test_nan_candidate_refused_last_good_keeps_serving(rng):
+    fi = FaultInjector()
+    eng, x, y = _engine(rng, faults=fi)
+    fi.arm(site="freeze", kind="nan_tables")
+    eng.submit_refresh(y=y + 0.05)
+    assert not eng.refresh_now()
+    h = eng.health()
+    assert h.refreshes_rejected == 1 and h.version == 1
+    assert h.status == "degraded"  # newer data exists but is not serving
+    assert "non-finite" in h.last_failure
+    res = eng.query(x[:16])  # last-good still serves, flagged stale
+    assert res.version == 1 and res.stale
+    assert bool(jnp.all(jnp.isfinite(res.mean)))
+
+    # inf poisoning takes the same gate
+    fi.arm(site="freeze", kind="inf_tables")
+    eng.submit_refresh(y=y + 0.1)
+    assert not eng.refresh_now()
+    assert eng.health().refreshes_rejected == 2
+
+    # a clean refresh recovers: version bumps, health returns to ok
+    eng.submit_refresh(y=y + 0.1)
+    assert eng.refresh_now()
+    assert eng.version == 2
+    assert eng.health().status == "ok"
+    assert not eng.query(x[:16]).stale
+    eng.close()
+
+
+def test_cg_stall_refused_by_convergence_gate(rng):
+    fi = FaultInjector()
+    eng, x, y = _engine(rng, faults=fi)
+    fi.arm(site="freeze", kind="cg_stall")
+    eng.submit_refresh(y=y + 0.05)
+    assert not eng.refresh_now()
+    h = eng.health()
+    assert h.refreshes_rejected == 1 and h.version == 1
+    assert "not converged" in h.last_failure
+    eng.close()
+
+
+def test_overflow_recovers_with_grown_cap(rng):
+    fi = FaultInjector()
+    eng, x, y = _engine(rng, faults=fi)
+    fi.arm(site="freeze", kind="overflow", cap=8)
+    eng.submit_refresh(y=y + 0.05)
+    assert eng.refresh_now()  # refused at cap 8, recovered by regrowth
+    h = eng.health()
+    assert h.overflow_recoveries >= 1
+    assert h.refreshes_ok == 1 and h.version == 2
+    assert bool(jnp.all(jnp.isfinite(eng.query(x[:16]).mean)))
+    eng.close()
+
+
+def test_wedged_refresh_abandoned_and_never_publishes_late(rng):
+    fi = FaultInjector()
+    eng, x, y = _engine(rng, faults=fi, refresh_min_deadline_s=0.2,
+                        refresh_max_deadline_s=0.2)
+    fi.arm(site="freeze", kind="slow", seconds=1.0)
+    eng.submit_refresh(y=y + 0.05)
+    t0 = time.perf_counter()
+    assert not eng.refresh_now()  # abandoned at the 0.2 s deadline
+    assert time.perf_counter() - t0 < 0.9  # did NOT wait out the sleep
+    h = eng.health()
+    assert h.refreshes_wedged == 1 and h.version == 1
+    assert "wedged" in h.last_failure
+    res = eng.query(x[:16])
+    assert res.version == 1 and res.stale
+
+    # the abandoned attempt finishes its sleep + freeze eventually; its
+    # candidate must never publish
+    time.sleep(1.6)
+    assert eng.version == 1
+    # the engine itself is not stuck: the next clean refresh publishes
+    eng.submit_refresh(y=y + 0.05)
+    assert eng.refresh_now()
+    assert eng.version == 2
+    eng.close()
+
+
+def test_transient_query_fault_retried_persistent_refused(rng):
+    fi = FaultInjector()
+    eng, x, y = _engine(rng, faults=fi, max_retries=2)
+    fi.arm(site="query", kind="exception")  # transient: next probe only
+    res = eng.query(x[:16])
+    assert bool(jnp.all(jnp.isfinite(res.mean)))
+    h = eng.health()
+    assert h.queries_retried == 1 and h.queries_refused == 0
+
+    fi.arm(site="query", kind="exception", count=3)  # > max_retries
+    with pytest.raises(ServeUnavailable):
+        eng.query(x[:16])
+    h = eng.health()
+    assert h.queries_refused == 1
+    # the engine recovers: the fault schedule is exhausted
+    assert bool(jnp.all(jnp.isfinite(eng.query(x[:16]).mean)))
+    eng.close()
+
+
+def test_fallback_lane_and_staleness_alert(rng):
+    eng, x, y = _engine(rng, staleness_window=4, staleness_alert=0.5)
+    far = x[:8] + 100.0  # every simplex vertex misses the frozen lattice
+    res = eng.query(far)
+    assert bool(res.fallback.all())
+    np.testing.assert_allclose(np.asarray(res.mean), 0.0, atol=0.0)
+    np.testing.assert_allclose(np.asarray(res.var),
+                               float(eng.predictor().outputscale),
+                               atol=1e-6)
+    res = eng.query(far)
+    h = eng.health()
+    assert h.fallback_queries == 16
+    assert h.staleness > 0.5 and h.staleness_alert
+    assert h.status == "degraded"  # the lattice no longer covers traffic
+    # in-lattice traffic drains the rolling window back below the alert
+    for _ in range(4):
+        eng.query(x[:16])
+    assert not eng.health().staleness_alert
+    assert eng.health().status == "ok"
+    eng.close()
+
+
+def test_background_worker_refreshes_and_coalesces(rng):
+    eng, x, y = _engine(rng, background=True)
+    # two quick submissions: the worker serves the NEWEST generation
+    eng.submit_refresh(y=y + 0.01)
+    gen = eng.submit_refresh(y=y + 0.02)
+    assert eng.wait_refreshed(gen, timeout_s=60.0)
+    assert not eng.query(x[:16]).stale
+    assert eng.health().refreshes_ok >= 1
+    eng.close()
+
+
+def test_refresh_worker_exception_reports_failure(rng):
+    fi = FaultInjector()
+    eng, x, y = _engine(rng, faults=fi, background=True)
+    fi.arm(site="refresh", kind="exception", note="worker crash")
+    gen = eng.submit_refresh(y=y + 0.05)
+    assert not eng.wait_refreshed(gen, timeout_s=60.0)
+    h = eng.health()
+    assert h.refreshes_failed == 1 and h.version == 1
+    assert "injected exception" in h.last_failure
+    eng.close()
+
+
+def test_initial_freeze_must_validate(rng):
+    x, y = _data(rng)
+    with pytest.raises(RefreshRejected, match="not converged"):
+        GPServeEngine(SimplexGP(STALL), GPParams.init(3, noise=0.3), x, y,
+                      key=jax.random.PRNGKey(0),
+                      config=EngineConfig(variance_rank=6))
+
+
+# -- the soak harness itself, at tier-1 scale -------------------------------
+
+@pytest.mark.bench_smoke
+def test_soak_smoke_zero_invalid_responses(rng):
+    """benchmarks/fig_soak.py's full scripted fault schedule (worker
+    crash, CG stall, NaN tables, capacity overflow, wedged freeze,
+    transient + persistent query faults) against a live engine at tiny
+    size: every scripted fault fires, every refused candidate stays
+    unpublished, and not one served response is invalid."""
+    from benchmarks.fig_soak import measure_soak
+
+    x, y = _data(rng, n=240, d=3)
+    xs_out = jnp.asarray(rng.normal(size=(64, 3)) * 2.0, jnp.float32)
+    row = measure_soak(x, y, xs_out, variance_rank=4, bq=48, batches=18,
+                       refresh_every=3, query_transient_at=5,
+                       query_persistent_at=12)
+    r, t = row["refresh"], row["traffic"]
+    assert t["invalid_responses"] == 0
+    assert t["availability"] >= 0.9
+    assert t["served"] > 0 and t["refused"] >= 1 and t["retried"] >= 1
+    assert r["ok"] >= 2 and r["rejected"] == 2 and r["wedged"] == 1
+    assert r["overflow_recoveries"] >= 1
+    assert r["warm_speedup"] > 1.0
+    assert r["warm_iters"] < r["cold_iters"]
+    fired = {(f["site"], f["kind"]) for f in row["faults"]}
+    assert {("refresh", "exception"), ("freeze", "cg_stall"),
+            ("freeze", "nan_tables"), ("freeze", "overflow"),
+            ("freeze", "slow"), ("query", "exception")} <= fired
+    assert row["final_status"] == "ok"

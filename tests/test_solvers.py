@@ -6,9 +6,9 @@ import pytest
 from _hyp_compat import given, settings, st
 
 from repro.core import kernels_math as km
-from repro.solvers import (cg, expected_iters, lanczos, pivoted_cholesky,
-                           precond_logdet, rrcg, slq_logdet,
-                           slq_logdet_from_cg, woodbury_precond)
+from repro.solvers import (cg, cg_while, expected_iters, lanczos,
+                           pivoted_cholesky, precond_logdet, rrcg,
+                           slq_logdet, slq_logdet_from_cg, woodbury_precond)
 
 
 def _spd(rng, n, cond=100.0):
@@ -35,6 +35,46 @@ def test_cg_min_iters_at_paper_tolerance(rng):
     x, info = cg(lambda v: a @ v, b, tol=1.0, max_iters=100, min_iters=10)
     assert int(info.iterations) >= 10
     assert float(jnp.linalg.norm(x)) > 0
+
+
+def test_cg_while_matches_scan_cg_cold(rng):
+    """The early-exit solver runs the identical update recurrence, so a
+    cold start must reproduce the scan-based ``cg`` solution bit-for-bit
+    (same converged mask, same solution, fewer wasted iterations)."""
+    a = _spd(rng, 200)
+    b = jnp.asarray(rng.normal(size=(200, 3)), jnp.float32)
+    xs, info_s = cg(lambda v: a @ v, b, tol=1e-5, max_iters=300)
+    xw, info_w = cg_while(lambda v: a @ v, b, tol=1e-5, max_iters=300)
+    np.testing.assert_array_equal(np.asarray(xw), np.asarray(xs))
+    assert bool(info_w.converged.all())
+    assert int(info_w.iterations) <= int(info_s.iterations)
+
+
+def test_cg_while_warm_start_cuts_iterations(rng):
+    """Warm-starting from the true solution exits without iterating;
+    warm-starting from a nearby solve takes fewer iterations than cold
+    and reaches the same answer. This is the refresh path's economics
+    (gp/serve.refreeze)."""
+    a = _spd(rng, 200)
+    b = jnp.asarray(rng.normal(size=(200, 1)), jnp.float32)
+    x_cold, info_cold = cg_while(lambda v: a @ v, b, tol=1e-5, max_iters=300)
+    # a seed already within tolerance starts inactive: zero iterations.
+    # (tol is looser than the cold solve's because the TRUE residual of
+    # x_cold sits slightly above the recurrence residual it stopped on.)
+    x_same, info_same = cg_while(lambda v: a @ v, b, tol=1e-4,
+                                 max_iters=300, x0=x_cold)
+    assert int(info_same.iterations) == 0
+    np.testing.assert_array_equal(np.asarray(x_same), np.asarray(x_cold))
+    # perturbed rhs: warm start from the old solution converges in fewer
+    # iterations than the cold solve of the new system
+    b2 = b + 0.01 * jnp.asarray(rng.normal(size=b.shape), jnp.float32)
+    _, info_cold2 = cg_while(lambda v: a @ v, b2, tol=1e-5, max_iters=300)
+    x_warm, info_warm = cg_while(lambda v: a @ v, b2, tol=1e-5,
+                                 max_iters=300, x0=x_cold)
+    assert bool(info_warm.converged.all())
+    assert int(info_warm.iterations) < int(info_cold2.iterations)
+    rel = float(jnp.linalg.norm(a @ x_warm - b2) / jnp.linalg.norm(b2))
+    assert rel < 3e-5
 
 
 def test_preconditioner_reduces_iterations(rng):
