@@ -118,10 +118,33 @@ def _check_train(p):
                        f"{shared[k]} > 1 — the §9 contract broke")
 
 
+def _check_recovery(p):
+    """The DESIGN.md §14 durability acceptance invariants."""
+    s = p["summary"]
+    if s["max_generations_lost"] > 1:
+        yield (f"fig_recovery: {s['max_generations_lost']} generations "
+               "lost across a kill — the atomic-persist bound (<= 1) broke")
+    if s["invalid_responses"] != 0:
+        yield (f"fig_recovery: {s['invalid_responses']} invalid "
+               "response(s) served after restart")
+    if not s["all_corruptions_detected"]:
+        yield (f"fig_recovery: only {s['corruptions_detected']}/"
+               f"{s['corruptions']} disk corruptions detected at boot — "
+               "a damaged generation could have served")
+    if s["kills"] < 2:
+        yield (f"fig_recovery: kill sites not exercised "
+               f"(kills={s['kills']} < 2)")
+    if s["warm_boots"] < 1:
+        yield "fig_recovery: no restart ever warm-booted from the store"
+    if s["errors"]:
+        yield f"fig_recovery: cycle errors: {s['errors']}"
+
+
 ENFORCED = [
     ("BENCH_build.json", _check_build),
     ("BENCH_serve.json", _check_serve),
     ("BENCH_soak.json", _check_soak),
+    ("BENCH_recovery.json", _check_recovery),
 ]
 
 ADVISORY = [

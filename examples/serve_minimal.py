@@ -5,10 +5,14 @@ no lattice build, no CG solve, cost independent of n (DESIGN.md §12).
 The second half runs the same Predictor through the fault-tolerant
 serving engine (DESIGN.md §13): queries against a hot-swappable
 registry, warm background refreshes when new data lands, health/
-staleness reporting.
+staleness reporting. The final act makes the state DURABLE (§14):
+persist the Predictor to a generation store, kill the process
+mid-persist, and warm-boot a fresh engine from disk — no training, no
+freeze, no data loss beyond the generation being written.
 
     PYTHONPATH=src python examples/serve_minimal.py
 """
+import tempfile
 import time
 
 import jax
@@ -18,7 +22,8 @@ import numpy as np
 from repro.gp import (GPParams, SimplexGP, SimplexGPConfig, fit, freeze,
                       posterior)
 from repro.gp.serve import predict
-from repro.launch import EngineConfig, GPServeEngine
+from repro.launch import EngineConfig, GPServeEngine, PredictorStore
+from repro.runtime.faults import corrupt_checkpoint
 
 # --- data: a smooth function of 4 inputs + noise ---------------------------
 rng = np.random.default_rng(0)
@@ -96,3 +101,42 @@ with GPServeEngine(model, params, x_tr, y_tr, key=jax.random.PRNGKey(1),
     print(f"refresh: version {eng.version} in {h.last_refresh_s * 1e3:.0f} "
           f"ms (warm; CG {int(eng.predictor().cg_iterations)} iters), "
           f"status={h.status}, staleness={h.staleness:.3f}")
+
+# --- durable state: save -> kill -> warm boot (DESIGN.md §14) --------------
+# In production the frozen Predictor outlives the process: the engine
+# persists every published version to a generation store (atomic
+# tmp+rename, per-blob checksums), and a restarted engine boots from
+# the newest generation that passes the full load gate — checksums,
+# validate_predictor, and an in-lattice self-probe — skipping anything
+# damaged. Here we persist two generations, vandalize the newest on
+# disk (a stand-in for a torn write or a kill mid-persist: both leave
+# either an ignored *.tmp orphan or a detectably damaged directory),
+# and watch the warm boot fall back one generation instead of serving
+# garbage or re-training.
+with tempfile.TemporaryDirectory() as root:
+    store = PredictorStore(root, keep_last=3)
+    with GPServeEngine(model, params, x_tr, y_tr,
+                       key=jax.random.PRNGKey(1),
+                       config=EngineConfig(variance_rank=20),
+                       store=store, model_name="demo") as eng:
+        eng.query(queries)                    # cold boot: store was empty
+        eng.submit_refresh(y=y_new)
+        eng.refresh_now()                     # publish + persist gen 2
+        eng.wait_persisted()                  # persistence is async
+        print(f"persisted generations on disk: {store.generations('demo')}")
+
+    # "kill": the process is gone; only the store survives. Damage the
+    # newest generation the way a real crash or disk fault would.
+    corrupt_checkpoint(store.path("demo", store.generations("demo")[-1]),
+                       "bitflip")
+
+    t0 = time.perf_counter()
+    with GPServeEngine(model, params, x_tr, y_tr,
+                       key=jax.random.PRNGKey(2),
+                       config=EngineConfig(variance_rank=20),
+                       store=store, model_name="demo") as eng2:
+        res = eng2.query(queries)             # no fit, no freeze, no CG
+        h = eng2.health()
+        print(f"warm boot: {time.perf_counter() - t0:.2f}s to first answer "
+              f"(mode={h.boot_mode}, generation={h.boot_generation}, "
+              f"skipped {h.boot_skipped} damaged), version {res.version}")

@@ -270,12 +270,28 @@ def estimate_m(z: Array, spacing: float, *, sample: int = 4096) -> int:
     """Estimate the deduplicated lattice size m by hash-inserting a subsample.
 
     ``suggest_capacity``'s constant-occupancy guess knows nothing about the
-    data; this inserts the vertex keys of an evenly-strided subsample at two
-    scales (s and s/2) and extrapolates with the fitted power law
+    data; this inserts the vertex keys of an evenly-strided subsample at
+    THREE scales (s/4, s/2, s) and extrapolates with the fitted power law
     ``m(n) ~ n^gamma`` (gamma in [0, 1]: 0 = the subsample already saturated
     the lattice, 1 = every point contributes fresh vertices). Exact when
     ``sample >= n``. Eager-only (returns a concrete int); cost is one
-    O(sample * d) insert — trivial next to a full build.
+    O(sample * d) insert per scale — trivial next to a full build.
+
+    Why three points: on MULTI-SCALE data (tight clusters on a sparse
+    background) the growth curve is convex in log-log — small subsamples
+    saturate the within-cluster vertices, so the s/2 -> s slope is steeper
+    than the s/4 -> s/2 one, and the old 2-point fit (which only saw the
+    coarser average slope through the saturated regime, or worse,
+    underestimated via a lucky flat segment) produced caps that overflow
+    and pay the grow-and-retry rebuild. The estimator fits gamma by
+    least squares over the three log-log points, then applies a
+    MONOTONICITY SANITY CHECK on the segment slopes: the nested prefixes
+    guarantee m(s/4) <= m(s/2) <= m(s), so if the tail slope exceeds the
+    head slope (convex growth — the multi-scale signature), the tail
+    slope is the better predictor of what extrapolation will meet and
+    wins over the least-squares average. Underestimates only cost a
+    grow-and-retry rebuild (the overflow flag catches them), so the
+    check deliberately resolves ambiguity upward.
     """
     n, d = z.shape
     s = min(n, max(int(sample), 64))
@@ -294,8 +310,25 @@ def estimate_m(z: Array, spacing: float, *, sample: int = 4096) -> int:
     if s >= n:
         return m_s  # the "subsample" was the whole set: exact
     half = max(s // 2, 32)
+    quarter = max(half // 2, 16)
     m_h = distinct(zs[:half])
-    gamma = math.log(max(m_s, 1) / max(m_h, 1)) / math.log(s / half)
+    m_q = distinct(zs[:quarter]) if quarter < half else m_h
+    # log-log samples; prefixes nest, so counts are non-decreasing by
+    # construction — max() below only guards degenerate tiny samples
+    pts = [(math.log(quarter), math.log(max(m_q, 1))),
+           (math.log(half), math.log(max(min(m_h, m_s), m_q, 1))),
+           (math.log(s), math.log(max(m_s, 1)))]
+    xm = sum(p[0] for p in pts) / 3
+    ym = sum(p[1] for p in pts) / 3
+    den = sum((p[0] - xm) ** 2 for p in pts)
+    gamma_lsq = sum((p[0] - xm) * (p[1] - ym) for p in pts) / max(den, 1e-12)
+    g_head = (pts[1][1] - pts[0][1]) / max(pts[1][0] - pts[0][0], 1e-12)
+    g_tail = (pts[2][1] - pts[1][1]) / max(pts[2][0] - pts[1][0], 1e-12)
+    # monotonicity sanity check: convex growth (tail steeper than head)
+    # means the least-squares slope is dragged down by the saturated
+    # small-sample regime — trust the tail, the regime extrapolation
+    # actually enters
+    gamma = g_tail if g_tail > g_head else gamma_lsq
     gamma = min(max(gamma, 0.0), 1.0)
     return int(math.ceil(m_s * (n / s) ** gamma))
 

@@ -6,12 +6,15 @@ from repro.gp.predict import Posterior, cross_mvm, nll, posterior, rmse
 # attribute ``repro.gp.predict`` must stay the submodule above, not a
 # function shadowing it. Serving call sites use
 # ``from repro.gp.serve import predict``.
-from repro.gp.serve import (Predictor, ServeResult, ValidationReport,
-                            freeze, refreeze, validate_predictor)
-from repro.gp.train import TrainResult, fit
+from repro.gp.serve import (Predictor, PredictorLoadError, ServeResult,
+                            ValidationReport, freeze, load_predictor,
+                            refreeze, save_predictor, self_probe,
+                            validate_predictor)
+from repro.gp.train import FitReport, TrainResult, fit
 
 __all__ = ["GPParams", "SimplexGP", "SimplexGPConfig", "MLLResult",
            "mll_value_and_grad", "Posterior", "cross_mvm", "nll",
-           "posterior", "rmse", "TrainResult", "fit", "Predictor",
-           "ServeResult", "ValidationReport", "freeze", "refreeze",
-           "validate_predictor"]
+           "posterior", "rmse", "FitReport", "TrainResult", "fit",
+           "Predictor", "PredictorLoadError", "ServeResult",
+           "ValidationReport", "freeze", "load_predictor", "refreeze",
+           "save_predictor", "self_probe", "validate_predictor"]

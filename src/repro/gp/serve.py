@@ -34,7 +34,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import math
+import os
+import pathlib
+import shutil
 from typing import NamedTuple
 
 import jax
@@ -46,6 +50,8 @@ from repro.core import lattice as lat_mod
 from repro.core.filtering import LatticeCache
 from repro.core.lattice import LatticeIndex
 from repro.gp.models import GPParams, SimplexGP
+from repro.runtime.checkpoint import (CheckpointCorruptError, load_blobs,
+                                      read_manifest, save_blobs)
 from repro.solvers.cg import cg_while as cg_solve
 from repro.solvers.lanczos import lanczos as lanczos_run
 
@@ -411,3 +417,231 @@ def predict(pred: Predictor, xs: Array, *, backend: str | None = None,
         mean, var, miss = _sharded_predict_fn(mesh, axis_name,
                                               backend)(pred, xs_pad)
     return ServeResult(mean=mean[:b], var=var[:b], miss_mass=miss[:b])
+
+
+# -- Predictor persistence (DESIGN.md §14) -----------------------------------
+
+PREDICTOR_FORMAT = "simplex-gp-predictor"
+PREDICTOR_SCHEMA = 1
+
+
+class PredictorLoadError(CheckpointCorruptError):
+    """A saved Predictor failed integrity or validation at load.
+
+    Subclasses ``CheckpointCorruptError`` so generation-fallback code can
+    treat "corrupt training checkpoint" and "corrupt Predictor" with one
+    except clause. A Predictor that raises this was NEVER eligible to
+    serve — the load gate runs before any registry/publish step.
+    """
+
+
+def _predictor_arrays(pred: Predictor) -> dict[str, np.ndarray]:
+    return {
+        "tables": np.asarray(pred.tables),
+        "lengthscale": np.asarray(pred.lengthscale),
+        "outputscale": np.asarray(pred.outputscale),
+        "noise": np.asarray(pred.noise),
+        "alpha": np.asarray(pred.alpha),
+        "cg_converged": np.asarray(pred.cg_converged),
+        "cg_residual": np.asarray(pred.cg_residual),
+        "cg_iterations": np.asarray(pred.cg_iterations),
+        "index/tkeys": np.asarray(pred.index.tkeys),
+        "index/row_of_slot": np.asarray(pred.index.row_of_slot),
+        "index/slots": np.asarray(pred.index.slots),
+    }
+
+
+def save_predictor(pred: Predictor, path: str | pathlib.Path, *,
+                   extra: dict | None = None, faults=None) -> pathlib.Path:
+    """Atomically persist a Predictor to directory ``path``.
+
+    Layout mirrors runtime/checkpoint.py: one .npy blob per array leaf
+    plus a versioned ``manifest.json`` recording per-blob byte size and
+    CRC32 alongside the static fields (spacing/backend/buckets/n_train
+    and the index geometry). Writes land in ``<path>.tmp`` and publish
+    via ``os.replace`` — the atomicity boundary: a crash mid-write
+    leaves at most a dead ``.tmp`` (never a half-valid Predictor), a
+    crash after the rename leaves a fully valid one. ``faults`` (a
+    runtime/faults.FaultInjector) arms the kill-before/after-publish
+    crash sites the recovery harness exercises.
+    """
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.parent / (path.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    manifest = {
+        "format": PREDICTOR_FORMAT,
+        "schema": PREDICTOR_SCHEMA,
+        "static": {
+            "spacing": pred.spacing,
+            "backend": pred.backend,
+            "buckets": list(pred.buckets),
+            "n_train": pred.n_train,
+            "index": {"d": pred.index.d, "hcap": pred.index.hcap,
+                      "m": pred.index.m},
+        },
+        "extra": extra or {},
+        "leaves": save_blobs(tmp, _predictor_arrays(pred)),
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if faults is not None:
+        faults.kill_if_armed("persist_before_publish")
+    if path.exists():
+        shutil.rmtree(path)
+    os.replace(tmp, path)  # atomic publish
+    if faults is not None:
+        faults.kill_if_armed("persist_after_publish")
+    return path
+
+
+def self_probe(pred: Predictor, *, sample: int = 16,
+               check_end_to_end: bool = True) -> None:
+    """In-lattice self-probe: prove the loaded Predictor can actually
+    serve its own lattice before it becomes eligible to serve anyone.
+
+    ``validate_predictor`` checks VALUES (finiteness, ranges, shapes);
+    this checks BEHAVIOR, with no training data needed:
+
+      1. row-map bijection — the occupied entries of ``row_of_slot``
+         must hit every dense row 0..m-1 exactly once (a permuted or
+         duplicated row map passes the range check but serves the wrong
+         vertices);
+      2. hash round-trip — a sample of the index's own stored keys,
+         looked up through the REAL probe path (kernels/hash), must land
+         back on their own rows (catches a tkeys/row_of_slot pair that
+         was torn from two different generations);
+      3. end-to-end slice — ``predict`` on a tiny synthetic batch must
+         return finite mean/var with ``miss_mass`` in [0, 1] (catches a
+         static-field/blob mismatch that only explodes inside the jitted
+         slice kernel).
+
+    Raises ``PredictorLoadError`` on any failure; returns None when the
+    Predictor is fit to serve.
+    """
+    from repro.kernels.hash import ops as hash_ops
+
+    idx = pred.index
+    ros = np.asarray(idx.row_of_slot)
+    occ = np.nonzero(ros < idx.m)[0]
+    rows = ros[occ]
+    if occ.shape[0] != idx.m or not np.array_equal(np.sort(rows),
+                                                   np.arange(idx.m)):
+        raise PredictorLoadError(
+            "self-probe: index row_of_slot is not a bijection onto "
+            f"dense rows 0..{idx.m - 1} ({occ.shape[0]} occupied slots)")
+    take = occ[:: max(1, occ.shape[0] // max(sample, 1))][:sample]
+    tkeys = jnp.asarray(idx.tkeys)
+    queries = tkeys[jnp.asarray(take)]
+    found = np.asarray(hash_ops.hash_lookup(
+        tkeys, queries, jnp.ones((take.shape[0],), bool), idx.hcap,
+        backend="hash_xla"))
+    if (found < 0).any() or not np.array_equal(
+            ros[np.maximum(found, 0)], ros[take]):
+        raise PredictorLoadError(
+            "self-probe: the index's own keys do not look up to their "
+            "own rows — tkeys/row_of_slot are inconsistent")
+    gathered = np.asarray(pred.tables)[ros[take]]
+    if not np.isfinite(gathered).all():
+        raise PredictorLoadError(
+            "self-probe: probed table rows contain non-finite values")
+    if check_end_to_end:
+        d = int(pred.lengthscale.shape[0])
+        zs = np.zeros((2, d), np.float32)
+        zs[1] = 0.37  # off-origin: exercises nontrivial barycentric ranks
+        try:
+            res = predict(pred, jnp.asarray(zs))
+            mean = np.asarray(res.mean)
+            var = np.asarray(res.var)
+            miss = np.asarray(res.miss_mass)
+        except Exception as e:
+            raise PredictorLoadError(
+                f"self-probe: end-to-end predict failed "
+                f"({type(e).__name__}: {e})") from e
+        if not (np.isfinite(mean).all() and np.isfinite(var).all()):
+            raise PredictorLoadError(
+                "self-probe: end-to-end predict returned non-finite "
+                "mean/var")
+        if not ((miss >= 0) & (miss <= 1)).all():
+            raise PredictorLoadError(
+                f"self-probe: miss_mass outside [0, 1] ({miss})")
+
+
+def load_predictor(path: str | pathlib.Path, *, validate: bool = True,
+                   require_converged: bool = True) -> Predictor:
+    """Load a persisted Predictor; gate it before it can ever serve.
+
+    The load path enforces the §14 validation-before-serve rule in three
+    layers, all BEFORE the Predictor is returned to any registry:
+    blob integrity (existence / recorded size / CRC32 / parse — a
+    truncated or bit-flipped file raises here), the existing
+    ``validate_predictor`` value gate, and the ``self_probe`` behavior
+    gate. Any failure raises ``PredictorLoadError`` — a corrupted file
+    is rejected, never served. ``validate=False`` skips the two gates
+    (integrity checks always run) for diagnostic tooling only.
+    """
+    path = pathlib.Path(path)
+    try:
+        man = read_manifest(path / "manifest.json",
+                            expect_format=PREDICTOR_FORMAT)
+        if man.get("schema", 0) > PREDICTOR_SCHEMA:
+            raise CheckpointCorruptError(
+                f"{path}: predictor schema {man.get('schema')} is newer "
+                f"than this reader ({PREDICTOR_SCHEMA})")
+        static = man.get("static")
+        if not isinstance(static, dict) or not isinstance(
+                static.get("index"), dict):
+            raise CheckpointCorruptError(
+                f"{path}: manifest missing the static-field table")
+        flat = load_blobs(path, man["leaves"])
+        missing = set(_REQUIRED_LEAVES) - set(flat)
+        if missing:
+            raise CheckpointCorruptError(
+                f"{path}: manifest lists no blob for {sorted(missing)}")
+    except PredictorLoadError:
+        raise
+    except CheckpointCorruptError as e:
+        raise PredictorLoadError(str(e)) from e
+
+    try:
+        idx_static = static["index"]
+        index = LatticeIndex(
+            tkeys=jnp.asarray(flat["index/tkeys"]),
+            row_of_slot=jnp.asarray(flat["index/row_of_slot"]),
+            slots=jnp.asarray(flat["index/slots"]),
+            d=int(idx_static["d"]), hcap=int(idx_static["hcap"]),
+            m=int(idx_static["m"]))
+        pred = Predictor(
+            index=index,
+            tables=jnp.asarray(flat["tables"]),
+            lengthscale=jnp.asarray(flat["lengthscale"]),
+            outputscale=jnp.asarray(flat["outputscale"]),
+            noise=jnp.asarray(flat["noise"]),
+            alpha=jnp.asarray(flat["alpha"]),
+            cg_converged=jnp.asarray(flat["cg_converged"]),
+            cg_residual=jnp.asarray(flat["cg_residual"]),
+            cg_iterations=jnp.asarray(flat["cg_iterations"]),
+            spacing=float(static["spacing"]),
+            backend=str(static["backend"]),
+            buckets=tuple(int(b) for b in static["buckets"]),
+            n_train=int(static["n_train"]))
+    except (KeyError, TypeError, ValueError) as e:
+        raise PredictorLoadError(
+            f"{path}: manifest/blob structure unusable "
+            f"({type(e).__name__}: {e})") from e
+
+    if validate:
+        rep = validate_predictor(pred, require_converged=require_converged)
+        if not rep.ok:
+            raise PredictorLoadError(
+                f"{path}: loaded predictor failed validation: "
+                + "; ".join(rep.failures))
+        self_probe(pred)
+    return pred
+
+
+_REQUIRED_LEAVES = tuple(sorted((
+    "tables", "lengthscale", "outputscale", "noise", "alpha",
+    "cg_converged", "cg_residual", "cg_iterations",
+    "index/tkeys", "index/row_of_slot", "index/slots")))

@@ -14,10 +14,27 @@ headroom for lengthscale drift), threads it into the jitted step/eval as a
 static argument, and watches the step's overflow flag: if training moves
 the lengthscale enough to overflow the table, the cap grows and the step
 re-jits — the grow-and-retry contract, amortized over the whole run.
+
+Durability (DESIGN.md §14): training state is the expensive asset of an
+MVM-based run, so ``fit`` periodically checkpoints the FULL loop state —
+``(params, opt_state, best_params, rng key)`` as host-gathered logical
+arrays via ``runtime/checkpoint.py`` (so a restore re-shards onto any
+mesh, per ``runtime/elastic.py``), plus the non-array loop state (epoch,
+caps, early-stop bookkeeping, the divergence window) in the manifest.
+A crashed run re-invoked with the same ``ckpt_dir`` resumes from the
+newest VALID checkpoint bit-compatibly: the rng key is saved post-split,
+so the resumed trajectory is the uninterrupted one.
+
+The same snapshot powers the DIVERGENCE GUARD: a non-finite loss/grad or
+a loss spike outside the windowed band rolls the loop back to the last
+good state (in-memory; the disk checkpoint is the crash-durable copy)
+with escalated noise jitter and a backed-off learning rate — bounded by
+``max_rollbacks``, every event recorded in the ``FitReport``.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable
 
@@ -29,10 +46,24 @@ from repro.gp import mll as mll_mod
 from repro.gp import predict as predict_mod
 from repro.gp.models import GPParams, SimplexGP
 from repro.optim import Adam
+from repro.runtime.checkpoint import CheckpointManager
 
 Array = jax.Array
 
 CAP_GROWTH = 4  # multiplier applied when a step/eval overflows its table
+
+
+@dataclasses.dataclass
+class FitReport:
+    """Durability/robustness log of one ``fit`` run (DESIGN.md §14)."""
+
+    resumed_from_epoch: int | None = None  # checkpointed epoch restored at start
+    checkpoint_dir: str | None = None
+    checkpoints_written: int = 0
+    rollbacks: list = dataclasses.field(default_factory=list)
+    # each rollback entry: {epoch, reason, restored_epoch, lr_scale,
+    #                       jitter_raw} — the full escalation trail
+    completed_epochs: int = 0
 
 
 @dataclasses.dataclass
@@ -41,6 +72,7 @@ class TrainResult:
     best_params: GPParams
     history: list[dict]
     best_val_rmse: float
+    report: FitReport = dataclasses.field(default_factory=FitReport)
 
 
 def _auto_cap(model: SimplexGP, params: GPParams, x: Array, *,
@@ -59,38 +91,135 @@ def _auto_cap(model: SimplexGP, params: GPParams, x: Array, *,
     return min(max(lat.cap * headroom, 1024), worst)
 
 
+@dataclasses.dataclass
+class _LoopState:
+    """Everything the loop needs to continue from — the checkpoint unit."""
+
+    params: GPParams
+    opt_state: object
+    best_params: GPParams
+    key: Array
+    epoch: int  # last COMPLETED epoch (-1 = none)
+    cap: int
+    cap_val: int
+    best_val_rmse: float
+    stall: int
+    lr_scale: float
+    jitter_raw: float
+    window: list  # recent accepted losses (-mll) for the spike band
+    rollbacks: list  # rollback log entries (survive resume)
+
+    def arrays(self) -> dict:
+        return {"params": self.params, "opt_state": self.opt_state,
+                "best_params": self.best_params, "key": self.key}
+
+    def extra(self) -> dict:
+        return {"epoch": self.epoch, "cap": self.cap,
+                "cap_val": self.cap_val,
+                "best_val_rmse": self.best_val_rmse, "stall": self.stall,
+                "lr_scale": self.lr_scale, "jitter_raw": self.jitter_raw,
+                "window": list(self.window),
+                "rollbacks": list(self.rollbacks)}
+
+
 def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
         epochs: int = 100, lr: float = 0.1, seed: int = 0,
         use_rrcg: bool = False, patience: int = 15,
         auto_cap: bool = True, mesh=None,
-        log_fn: Callable[[str], None] | None = None) -> TrainResult:
+        log_fn: Callable[[str], None] | None = None,
+        ckpt_dir: str | None = None, ckpt_every: int = 10,
+        keep_last: int = 3, resume: bool = True,
+        max_rollbacks: int = 3, spike_window: int = 8,
+        spike_sigma: float = 10.0, lr_backoff: float = 0.5,
+        jitter_raw0: float = 0.1, faults=None) -> TrainResult:
     """``mesh`` runs every solve/posterior MVM data-parallel over the
     mesh's "data" axis (DESIGN.md §10); n and n + n_val must divide the
     axis size. The lattice build and the surrogate gradients stay
-    single-device — the per-iteration MVMs are where the time goes."""
-    d = x.shape[1]
-    params = GPParams.init(d)
-    opt = Adam(learning_rate=lr)
-    opt_state = opt.init(params)
-    key = jax.random.PRNGKey(seed)
+    single-device — the per-iteration MVMs are where the time goes.
 
+    Durability knobs: ``ckpt_dir`` enables crash-durable checkpoints
+    every ``ckpt_every`` epochs (atomic, async, ``keep_last`` retained
+    plus keep-best by validation RMSE); re-invoking ``fit`` with the same
+    ``ckpt_dir`` and ``resume=True`` continues from the newest VALID
+    checkpoint (corrupt generations are skipped) with the identical rng
+    trajectory. The divergence guard rolls back to the last good state
+    when the loss/grads go non-finite or the loss spikes more than
+    ``spike_sigma`` standard deviations above the ``spike_window``-epoch
+    band, escalating a raw-noise jitter (+``jitter_raw0`` · 2^k) and
+    backing off the learning rate (×``lr_backoff``) each time; after
+    ``max_rollbacks`` rollbacks it raises rather than looping. ``faults``
+    (a ``runtime/faults.FaultInjector``) arms the scripted crash/
+    divergence probes the recovery tests replay.
+    """
+    d = x.shape[1]
     worst = default_capacity(*x.shape)
     worst_joint = default_capacity(x.shape[0] + x_val.shape[0], d)
-    if auto_cap and model.config.shared_lattice:
-        cap = _auto_cap(model, params, x)
-        cap_val = _auto_cap(model, params, jnp.concatenate([x, x_val]))
-    else:
-        cap, cap_val = worst, worst_joint
 
-    def make_step(cap):
+    manager = None
+    if ckpt_dir is not None:
+        manager = CheckpointManager(ckpt_dir, keep_last=keep_last,
+                                    keep_best=1)
+
+    report = FitReport(checkpoint_dir=ckpt_dir)
+
+    # -- initial or resumed loop state --------------------------------------
+    def _fresh_state() -> _LoopState:
+        params = GPParams.init(d)
+        if auto_cap and model.config.shared_lattice:
+            cap = _auto_cap(model, params, x)
+            cap_val = _auto_cap(model, params, jnp.concatenate([x, x_val]))
+        else:
+            cap, cap_val = worst, worst_joint
+        return _LoopState(params=params,
+                          opt_state=Adam(learning_rate=lr).init(params),
+                          best_params=params,
+                          key=jax.random.PRNGKey(seed), epoch=-1,
+                          cap=cap, cap_val=cap_val,
+                          best_val_rmse=float("inf"), stall=0,
+                          lr_scale=1.0, jitter_raw=0.0, window=[],
+                          rollbacks=[])
+
+    st = _fresh_state()
+    if manager is not None and resume:
+        step0 = manager.latest_valid_step()
+        if step0 is not None:
+            tmpl = st.arrays()
+            tree = manager.restore(step0, jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tmpl))
+            extra = manager.manifest(step0)["extra"]
+            st = _LoopState(params=tree["params"],
+                            opt_state=tree["opt_state"],
+                            best_params=tree["best_params"],
+                            key=tree["key"], epoch=int(extra["epoch"]),
+                            cap=int(extra["cap"]),
+                            cap_val=int(extra["cap_val"]),
+                            best_val_rmse=float(extra["best_val_rmse"]),
+                            stall=int(extra["stall"]),
+                            lr_scale=float(extra["lr_scale"]),
+                            jitter_raw=float(extra["jitter_raw"]),
+                            window=list(extra.get("window", [])),
+                            rollbacks=list(extra.get("rollbacks", [])))
+            report.resumed_from_epoch = st.epoch
+            if log_fn:
+                log_fn(f"resume: restored epoch {st.epoch} from {ckpt_dir}")
+
+    def make_opt(lr_scale: float) -> Adam:
+        return Adam(learning_rate=lr * lr_scale)
+
+    opt = make_opt(st.lr_scale)
+
+    def make_step(cap, opt):
         @jax.jit
         def step(params, opt_state, key):
             res = mll_mod.mll_value_and_grad(model, params, x, y, key,
                                              use_rrcg=use_rrcg, cap=cap,
                                              mesh=mesh)
+            grads_ok = jnp.all(jnp.asarray(
+                [jnp.all(jnp.isfinite(g))
+                 for g in jax.tree.leaves(res.grads)]))
             new_params, new_state = opt.update(res.grads, opt_state, params)
             return (new_params, new_state, res.mll, res.cg_iters,
-                    res.overflow, res.pack_overflow)
+                    res.overflow, res.pack_overflow, grads_ok)
         return step
 
     def make_val(cap_val):
@@ -112,44 +241,142 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
                 "lengthscale/input scaling is degenerate (z = x / ls far "
                 "too spread). Rescale inputs or bound the lengthscale.")
 
-    step = make_step(cap)
-    val_rmse = make_val(cap_val)
+    step = make_step(st.cap, opt)
+    val_rmse = make_val(st.cap_val)
 
-    best = (jnp.inf, params)
+    # in-memory rollback anchor: a cheap host copy of the last GOOD state
+    # (the disk checkpoint is the crash-durable copy of the same thing)
+    good = jax.tree.map(jnp.asarray, st.arrays())
+    good_meta = st.extra()
+
+    def _spike(loss: float) -> bool:
+        w = st.window
+        if len(w) < spike_window or not math.isfinite(loss):
+            return False
+        mean = sum(w) / len(w)
+        var = sum((v - mean) ** 2 for v in w) / len(w)
+        band = spike_sigma * max(math.sqrt(var),
+                                 0.02 * abs(mean) + 1e-3)
+        return loss > mean + band
+
+    def _rollback(epoch: int, reason: str):
+        nonlocal opt, step, good, good_meta
+        if len(st.rollbacks) >= max_rollbacks:
+            raise RuntimeError(
+                f"fit: divergence guard exhausted after {max_rollbacks} "
+                f"rollback(s); last reason: {reason}")
+        restored = jax.tree.map(jnp.asarray, good)
+        st.params = restored["params"]
+        st.opt_state = restored["opt_state"]
+        st.best_params = restored["best_params"]
+        st.key = restored["key"]
+        st.epoch = int(good_meta["epoch"])
+        st.best_val_rmse = float(good_meta["best_val_rmse"])
+        st.stall = int(good_meta["stall"])
+        st.window = []  # post-restore losses rejoin a fresh band
+        st.lr_scale *= lr_backoff
+        st.jitter_raw = jitter_raw0 * (2 ** len(st.rollbacks))
+        # escalated jitter: a larger noise floor conditions K_hat better;
+        # raw-space additive keeps the bump monotone under softplus
+        st.params = dataclasses.replace(
+            st.params, raw_noise=st.params.raw_noise + st.jitter_raw)
+        entry = dict(epoch=epoch, reason=reason,
+                     restored_epoch=st.epoch, lr_scale=st.lr_scale,
+                     jitter_raw=st.jitter_raw)
+        st.rollbacks.append(entry)
+        report.rollbacks.append(entry)
+        opt = make_opt(st.lr_scale)
+        step = make_step(st.cap, opt)
+        if log_fn:
+            log_fn(f"rollback #{len(st.rollbacks)} at epoch {epoch} "
+                   f"({reason}): restored epoch {st.epoch}, "
+                   f"lr x{st.lr_scale:g}, jitter +{st.jitter_raw:g}")
+
+    def _checkpoint(metric: float | None):
+        if manager is None:
+            return
+        manager.save(st.epoch, st.arrays(), metric=metric,
+                     extra=st.extra())
+        report.checkpoints_written += 1
+
+    report.rollbacks.extend(st.rollbacks)
     history = []
-    stall = 0
-    for epoch in range(epochs):
-        key, k1, k2 = jax.random.split(key, 3)
+    epoch = st.epoch + 1
+    while epoch < epochs:
+        if faults is not None:
+            faults.maybe_raise("fit")  # scripted crash (recovery tests)
+            if faults.take("fit", "nan_params") is not None:
+                st.params = dataclasses.replace(
+                    st.params, raw_lengthscale=st.params.raw_lengthscale
+                    .at[0].set(jnp.nan))
+            if faults.take("fit", "spike_params") is not None:
+                # near-zero noise: K_hat goes ill-conditioned and the
+                # data-fit term y^T K^-1 y explodes — a reliable, finite
+                # loss spike (unlike outputscale, whose logdet blow-up
+                # the truncated SLQ estimate underreports)
+                st.params = dataclasses.replace(
+                    st.params, raw_noise=st.params.raw_noise - 18.0)
+        st.key, k1, k2 = jax.random.split(st.key, 3)
         t0 = time.perf_counter()
         while True:
-            new_params, new_state, mll, iters, ovf, povf = step(
-                params, opt_state, k1)
+            new_params, new_state, mll, iters, ovf, povf, gok = step(
+                st.params, st.opt_state, k1)
             _check_pack(povf)
-            if not bool(ovf) or cap >= worst:
+            if not bool(ovf) or st.cap >= worst:
                 break
-            cap = min(cap * CAP_GROWTH, worst)  # stale grads: grow & redo
-            step = make_step(cap)
-        params, opt_state = new_params, new_state
+            st.cap = min(st.cap * CAP_GROWTH, worst)  # stale grads: regrow
+            step = make_step(st.cap, opt)
+
+        # -- divergence guard (DESIGN.md §14) -------------------------------
+        loss = float(-mll) if bool(jnp.isfinite(mll)) else float("nan")
+        if not (bool(jnp.isfinite(mll)) and bool(gok)):
+            _rollback(epoch, "non-finite loss/grads")
+            epoch = st.epoch + 1
+            continue
+        if _spike(loss):
+            _rollback(epoch, f"loss spike ({loss:.4g} outside the "
+                             f"{len(st.window)}-epoch band)")
+            epoch = st.epoch + 1
+            continue
+
+        st.params, st.opt_state = new_params, new_state
         dt = time.perf_counter() - t0
         while True:
-            rmse_v, ovf, povf = val_rmse(params, k2)
+            rmse_v, ovf, povf = val_rmse(st.params, k2)
             _check_pack(povf)
-            if not bool(ovf) or cap_val >= worst_joint:
+            if not bool(ovf) or st.cap_val >= worst_joint:
                 break
-            cap_val = min(cap_val * CAP_GROWTH, worst_joint)
-            val_rmse = make_val(cap_val)
+            st.cap_val = min(st.cap_val * CAP_GROWTH, worst_joint)
+            val_rmse = make_val(st.cap_val)
         rmse = float(rmse_v)
+        st.window = (st.window + [loss])[-spike_window:]
         history.append(dict(epoch=epoch, mll=float(mll), val_rmse=rmse,
-                            cg_iters=int(iters), seconds=dt, cap=cap))
+                            cg_iters=int(iters), seconds=dt, cap=st.cap))
         if log_fn:
             log_fn(f"epoch {epoch:3d}  mll/n {float(mll)/x.shape[0]:+.4f}  "
                    f"val_rmse {rmse:.4f}  cg_iters {int(iters)}  {dt:.2f}s")
-        if rmse < float(best[0]) - 1e-5:
-            best = (rmse, params)
-            stall = 0
+        if rmse < st.best_val_rmse - 1e-5:
+            st.best_val_rmse = rmse
+            st.best_params = st.params
+            st.stall = 0
         else:
-            stall += 1
-            if stall >= patience:
-                break
-    return TrainResult(params=params, best_params=best[1], history=history,
-                       best_val_rmse=float(best[0]))
+            st.stall += 1
+        st.epoch = epoch
+        report.completed_epochs += 1
+
+        # the just-completed epoch is the new rollback anchor (host copy,
+        # detached from the loop's live references)
+        good = jax.tree.map(jnp.asarray, st.arrays())
+        good_meta = st.extra()
+        if (epoch + 1) % max(ckpt_every, 1) == 0:
+            _checkpoint(rmse)
+        if st.stall >= patience:
+            break
+        epoch += 1
+
+    if manager is not None and history:
+        _checkpoint(history[-1]["val_rmse"])  # final state always durable
+        manager.wait()
+    return TrainResult(params=st.params, best_params=st.best_params,
+                       history=history, best_val_rmse=st.best_val_rmse,
+                       report=report)

@@ -1,9 +1,10 @@
 # NOTE: do not import dryrun here — it sets XLA_FLAGS at import time.
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.launch.serve_gp import (EngineConfig, GPServeEngine,
-                                   HealthStatus, QueryResult,
-                                   RefreshRejected, ServeUnavailable)
+                                   HealthStatus, PredictorStore,
+                                   QueryResult, RefreshRejected,
+                                   ServeUnavailable)
 
 __all__ = ["make_debug_mesh", "make_production_mesh", "EngineConfig",
-           "GPServeEngine", "HealthStatus", "QueryResult",
-           "RefreshRejected", "ServeUnavailable"]
+           "GPServeEngine", "HealthStatus", "PredictorStore",
+           "QueryResult", "RefreshRejected", "ServeUnavailable"]

@@ -41,11 +41,25 @@ Fault injection: pass a ``runtime/faults.FaultInjector`` and the engine
 probes it at its sites ("refresh" exceptions, "freeze" slow/NaN/cg-stall/
 overflow, "query" transients) — benchmarks/fig_soak.py scripts a failure
 schedule through a live engine and asserts zero invalid responses.
+
+Durability (DESIGN.md §14): a ``PredictorStore`` makes the engine's
+published state survive the process. The store is a named multi-model
+registry on disk (``<root>/<model>/gen_<k>/``, each generation one
+atomic ``gp.serve.save_predictor`` directory, keep-last-k plus keep-best
+retention). An engine constructed with a store WARM-BOOTS: it serves the
+newest generation that passes the full load gate (integrity checksums +
+``validate_predictor`` + self-probe), falling back generation by
+generation past corrupt ones, and only cold-freezes from the constructor
+data when no valid generation exists. Every published Predictor is
+persisted POST-publish on a background thread — queries never wait on
+disk; a persist failure degrades health, never serving.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import json
+import pathlib
 import threading
 import time
 from typing import NamedTuple
@@ -56,7 +70,8 @@ import numpy as np
 
 from repro.core import filtering
 from repro.gp.models import GPParams, SimplexGP
-from repro.gp.serve import (Predictor, predict, refreeze, freeze,
+from repro.gp.serve import (Predictor, PredictorLoadError, load_predictor,
+                            predict, refreeze, freeze, save_predictor,
                             validate_predictor)
 from repro.runtime.faults import FaultInjector
 from repro.runtime.straggler import StepWatchdog
@@ -121,6 +136,131 @@ class HealthStatus:
     last_refresh_s: float | None  # duration of the last completed refresh
     last_failure: str | None
     pending_refresh: bool
+    # durability lane (DESIGN.md §14) — defaults keep old constructors valid
+    boot_mode: str = "cold"  # "warm" = served from the store at startup
+    boot_generation: int | None = None  # store generation served at boot
+    boot_skipped: int = 0  # corrupt generations walked past during boot
+    persists_ok: int = 0
+    persists_failed: int = 0
+    persisted_version: int = 0  # newest engine version durable on disk
+
+
+class PredictorStore:
+    """Durable, multi-model Predictor registry on disk (DESIGN.md §14).
+
+    Layout: ``<root>/<model>/gen_<k>/`` — one atomic
+    ``gp.serve.save_predictor`` directory per generation, so every
+    generation is independently loadable and independently corruptible
+    (the warm-boot fallback walks them newest-first). Retention keeps the
+    newest ``keep_last`` generations PLUS the single best by the saved
+    metric (default: the alpha solve's final CG residual — lower is
+    better), so a regression in later generations never deletes the best
+    model the store has seen.
+    """
+
+    def __init__(self, root: str | pathlib.Path, *, keep_last: int = 3,
+                 keep_best: int = 1):
+        self.root = pathlib.Path(root)
+        self.keep_last = max(keep_last, 1)
+        self.keep_best = max(keep_best, 0)
+        self._lock = threading.Lock()
+
+    def model_dir(self, name: str) -> pathlib.Path:
+        if "/" in name or name in ("", ".", ".."):
+            raise ValueError(f"invalid model name {name!r}")
+        return self.root / name
+
+    def path(self, name: str, gen: int) -> pathlib.Path:
+        return self.model_dir(name) / f"gen_{gen:08d}"
+
+    def models(self) -> list[str]:
+        if not self.root.is_dir():
+            return []
+        return sorted(p.name for p in self.root.iterdir() if p.is_dir())
+
+    def generations(self, name: str) -> list[int]:
+        """Generation numbers on disk, ascending (published dirs only —
+        a dead ``.tmp`` from a mid-write crash is invisible here)."""
+        mdir = self.model_dir(name)
+        if not mdir.is_dir():
+            return []
+        gens = []
+        for p in mdir.iterdir():
+            if p.is_dir() and p.name.startswith("gen_") \
+                    and not p.name.endswith(".tmp"):
+                try:
+                    gens.append(int(p.name[4:]))
+                except ValueError:
+                    continue
+        return sorted(gens)
+
+    def _metric(self, name: str, gen: int) -> float:
+        try:
+            man = json.loads(
+                (self.path(name, gen) / "manifest.json").read_text())
+            return float(man["extra"]["metric"])
+        except Exception:
+            return float("inf")  # unreadable = never retention-best
+
+    def save(self, name: str, pred: Predictor, *, gen: int | None = None,
+             metric: float | None = None, extra: dict | None = None,
+             faults: FaultInjector | None = None) -> int:
+        """Persist ``pred`` as the next (or given) generation; prune.
+
+        Returns the generation written. ``metric`` feeds keep-best
+        retention (lower is better; defaults to the Predictor's CG
+        residual). The write itself is ``save_predictor``'s atomic
+        tmp+rename; retention runs after publish, so a crash during
+        pruning leaves extra generations, never fewer.
+        """
+        with self._lock:
+            if gen is None:
+                gens = self.generations(name)
+                gen = (gens[-1] + 1) if gens else 1
+            if metric is None:
+                metric = float(np.asarray(pred.cg_residual))
+            save_predictor(pred, self.path(name, gen),
+                           extra=dict(extra or {}, metric=metric, gen=gen),
+                           faults=faults)
+            self._prune(name)
+            return gen
+
+    def _prune(self, name: str):
+        import shutil
+        gens = self.generations(name)
+        keep = set(gens[-self.keep_last:])
+        if self.keep_best and gens:
+            by_metric = sorted(gens, key=lambda g: self._metric(name, g))
+            keep.update(by_metric[:self.keep_best])
+        for g in gens:
+            if g not in keep:
+                shutil.rmtree(self.path(name, g), ignore_errors=True)
+
+    def load_newest_valid(self, name: str, *,
+                          require_converged: bool = True
+                          ) -> tuple[Predictor, int, list[dict]]:
+        """Newest generation passing the FULL load gate, falling back
+        generation by generation past corrupt/invalid ones.
+
+        Returns ``(pred, gen, skipped)`` where ``skipped`` records every
+        newer generation that was rejected (gen + reason) — the warm-boot
+        audit trail. Raises ``FileNotFoundError`` when no generation
+        loads (the caller cold-freezes instead).
+        """
+        skipped: list[dict] = []
+        for gen in reversed(self.generations(name)):
+            try:
+                pred = load_predictor(
+                    self.path(name, gen),
+                    require_converged=require_converged)
+                return pred, gen, skipped
+            except PredictorLoadError as e:
+                skipped.append({"gen": gen, "reason": str(e)})
+        err = FileNotFoundError(
+            f"{self.model_dir(name)}: no valid predictor generation "
+            f"({len(skipped)} rejected)")
+        err.skipped = skipped  # cold-boot callers keep the audit trail
+        raise err
 
 
 @dataclasses.dataclass
@@ -148,7 +288,8 @@ class GPServeEngine:
                  y: Array, *, key: Array, config: EngineConfig | None = None,
                  faults: FaultInjector | None = None, mesh=None,
                  axis_name: str = "data", background: bool = False,
-                 cap: int | None = None):
+                 cap: int | None = None, store: PredictorStore | None = None,
+                 model_name: str = "default"):
         self.model = model
         self._cfg = config or EngineConfig()
         self._faults = faults
@@ -158,6 +299,11 @@ class GPServeEngine:
         self._cap = cap
         self._cache = filtering.LatticeCache()
         self._lock = threading.Lock()
+        self._store = store
+        self._model_name = model_name
+        self._persisted_version = 0
+        self._persist_threads: list[threading.Thread] = []
+        self._boot = {"mode": "cold", "generation": None, "skipped": 0}
 
         # counters (guarded by _lock)
         self._c = collections.Counter()
@@ -177,23 +323,48 @@ class GPServeEngine:
             window=16, multiplier=self._cfg.refresh_deadline_multiplier,
             min_deadline=self._cfg.refresh_min_deadline_s)
 
-        # initial cold freeze — the engine refuses to START without a
-        # valid Predictor (there is no last-good to degrade to yet)
+        # boot: prefer the durable store (warm boot — serve the newest
+        # generation that passes the full load gate, walking past corrupt
+        # ones); cold-freeze from the constructor data only when the
+        # store has nothing valid. The engine refuses to START without a
+        # valid Predictor either way (no last-good to degrade to yet).
         self._params = params
         self._x, self._y = x, y
-        t0 = time.perf_counter()
-        pred = freeze(model, params, x, y, key=self._next_key(),
-                      variance_rank=self._cfg.variance_rank, cap=cap,
-                      cache=self._cache)
-        rep = validate_predictor(
-            pred, require_converged=self._cfg.require_converged)
-        if not rep.ok:
-            raise RefreshRejected(
-                "initial freeze failed validation: " + "; ".join(rep.failures))
-        dt = time.perf_counter() - t0
-        self._watchdog.end_step(dt)
-        self._last_refresh_s = dt
-        self._publish(pred, gen=0)
+        pred = None
+        if store is not None:
+            try:
+                pred, gen, skipped = store.load_newest_valid(
+                    model_name,
+                    require_converged=self._cfg.require_converged)
+                self._boot = {"mode": "warm", "generation": gen,
+                              "skipped": len(skipped)}
+                if skipped:
+                    self._last_failure = (
+                        f"boot: skipped {len(skipped)} corrupt "
+                        f"generation(s), newest {skipped[0]['gen']}")
+            except FileNotFoundError as e:
+                pred = None
+                self._boot["skipped"] = len(getattr(e, "skipped", ()))
+        if pred is None:
+            t0 = time.perf_counter()
+            pred = freeze(model, params, x, y, key=self._next_key(),
+                          variance_rank=self._cfg.variance_rank, cap=cap,
+                          cache=self._cache)
+            rep = validate_predictor(
+                pred, require_converged=self._cfg.require_converged)
+            if not rep.ok:
+                raise RefreshRejected(
+                    "initial freeze failed validation: "
+                    + "; ".join(rep.failures))
+            dt = time.perf_counter() - t0
+            self._watchdog.end_step(dt)
+            self._last_refresh_s = dt
+        ver = self._publish(pred, gen=0)
+        if self._boot["mode"] == "cold":
+            # make the boot Predictor durable too (a crash before the
+            # first refresh must still warm-boot); warm boot skips this
+            # — its generation is already on disk
+            self._persist_async(pred, ver)
 
         # background refresh worker
         self._abandoned: list[threading.Thread] = []
@@ -229,6 +400,58 @@ class GPServeEngine:
                 self._registry.popitem(last=False)
             self._served_gen = max(self._served_gen, gen)
             return self._version
+
+    def _persist_async(self, pred: Predictor, version: int):
+        """Persist a just-published Predictor WITHOUT blocking queries.
+
+        Runs on a daemon thread: the query lane never waits on disk, and
+        a kill injected at the persistence sites dies off the serving
+        path (the published in-memory Predictor already served). Persist
+        failures count and degrade health — they never unpublish.
+        """
+        if self._store is None:
+            return
+
+        def work():
+            try:
+                self._store.save(self._model_name, pred,
+                                 extra={"engine_version": version},
+                                 faults=self._faults)
+                with self._lock:
+                    self._c["persists_ok"] += 1
+                    self._persisted_version = max(self._persisted_version,
+                                                  version)
+            except Exception as e:  # noqa: BLE001 — degrade, never crash
+                with self._lock:
+                    self._c["persists_failed"] += 1
+                    self._last_failure = f"persist: {e}"
+
+        t = threading.Thread(target=work, name="gp-persist", daemon=True)
+        with self._lock:
+            self._persist_threads.append(t)
+        t.start()
+
+    def wait_persisted(self, version: int | None = None, *,
+                       timeout_s: float = 30.0) -> bool:
+        """Block until engine ``version`` (default: current) is durable
+        on disk, a persist for it has FAILED, or the timeout expires.
+        True iff it is durable."""
+        if self._store is None:
+            return False
+        with self._lock:
+            want = self._version if version is None else version
+            fails0 = self._c["persists_failed"]
+        t1 = time.monotonic() + timeout_s
+        while time.monotonic() < t1:
+            with self._lock:
+                if self._persisted_version >= want:
+                    return True
+                done = not any(t.is_alive() for t in self._persist_threads)
+                failed = self._c["persists_failed"] > fails0
+            if done and failed:
+                return False
+            time.sleep(0.005)
+        return False
 
     def predictor(self, version: int | None = None) -> Predictor:
         with self._lock:
@@ -397,7 +620,8 @@ class GPServeEngine:
                     self._last_failure = f"refresh: {result['err']}"
                 return False
             self._watchdog.end_step(dt)
-            self._publish(result["pred"], gen=job.gen)
+            ver = self._publish(result["pred"], gen=job.gen)
+            self._persist_async(result["pred"], ver)
             with self._lock:
                 # accepted: advance the engine's notion of train data HERE
                 # (not in _do_refresh) so an abandoned wedged attempt that
@@ -504,6 +728,12 @@ class GPServeEngine:
                 last_failure=self._last_failure,
                 pending_refresh=self._pending is not None
                 or not self._refresh_idle,
+                boot_mode=self._boot["mode"],
+                boot_generation=self._boot["generation"],
+                boot_skipped=self._boot["skipped"],
+                persists_ok=c["persists_ok"],
+                persists_failed=c["persists_failed"],
+                persisted_version=self._persisted_version,
             )
 
     # -- lifecycle -----------------------------------------------------------
@@ -519,7 +749,10 @@ class GPServeEngine:
         # teardown never kills a thread mid-XLA-call
         with self._lock:
             abandoned = list(self._abandoned)
+            persisting = list(self._persist_threads)
         for t in abandoned:
+            t.join(timeout_s)
+        for t in persisting:  # drain in-flight persists (bounded)
             t.join(timeout_s)
 
     def __enter__(self):

@@ -1,4 +1,4 @@
-"""Sharding-agnostic checkpointing: atomic, async, keep-k.
+"""Sharding-agnostic checkpointing: atomic, async, keep-k, integrity-checked.
 
 Design (the orbax pattern, dependency-free):
 
@@ -12,6 +12,17 @@ Design (the orbax pattern, dependency-free):
   * an async writer thread overlaps serialization with training; ``wait``
     joins before the next save (single-buffered, like orbax's async).
   * keep-last-k + keep-best (by a metric the caller passes) retention.
+
+Integrity contract (DESIGN.md §14): the manifest records a schema
+version plus, per blob, its byte size and CRC32. ``restore``/``verify``
+check every blob BEFORE ``np.load`` touches it, so a truncated, missing,
+or bit-flipped blob raises ``CheckpointCorruptError`` with a precise
+message instead of crashing mid-parse — callers (gp/train resume,
+runtime/elastic, the serving warm boot) treat that error as "this
+generation is dead, fall back to the previous one". The blob read/write
+helpers (``save_blobs``/``load_blobs``) are shared with the Predictor
+persistence layer (gp/serve.py) so both durability formats enforce the
+same checks.
 """
 from __future__ import annotations
 
@@ -20,12 +31,26 @@ import os
 import pathlib
 import shutil
 import threading
-from typing import Any, Callable
+import zlib
+from typing import Any
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+SCHEMA_VERSION = 2  # manifest schema this writer emits
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed an integrity check (missing / truncated /
+    checksum-mismatched blob, unreadable or future-schema manifest).
+
+    The durability contract: callers must treat this as "generation
+    unusable — fall back", never as a crash. It is deliberately NOT a
+    subclass of ``OSError``/``ValueError`` so integrity failures cannot
+    be accidentally swallowed by broad IO handling.
+    """
 
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
@@ -56,6 +81,106 @@ def _unflatten_like(template: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
         import jax.numpy as jnp
         leaves.append(jnp.asarray(arr).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# -- blob IO (shared with gp/serve.py Predictor persistence) -----------------
+
+
+def _crc32(path: pathlib.Path) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while chunk := f.read(1 << 20):
+            crc = zlib.crc32(chunk, crc)
+    return crc
+
+
+def save_blobs(directory: pathlib.Path,
+               flat: dict[str, np.ndarray]) -> dict[str, dict]:
+    """Write every array as a .npy blob; return the manifest leaf metadata
+    (file name, shape, dtype, byte size, CRC32 of the on-disk bytes)."""
+    leaves: dict[str, dict] = {}
+    for name, arr in flat.items():
+        fname = name.replace("/", "__") + ".npy"
+        path = directory / fname
+        np.save(path, arr)
+        leaves[name] = {
+            "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype), "nbytes": path.stat().st_size,
+            "crc32": _crc32(path)}
+    return leaves
+
+
+def load_blobs(directory: pathlib.Path,
+               leaves: dict[str, dict]) -> dict[str, np.ndarray]:
+    """Load manifest-listed blobs with integrity checks BEFORE np.load.
+
+    Order of checks per blob: exists -> recorded byte size (catches
+    truncation without reading content) -> CRC32 (catches bit flips) ->
+    parseable .npy with the recorded shape/dtype. Any failure raises
+    ``CheckpointCorruptError`` naming the blob and the check that failed.
+    Pre-schema-2 manifests (no nbytes/crc32) still get the existence and
+    parse checks.
+    """
+    flat: dict[str, np.ndarray] = {}
+    for name, meta in leaves.items():
+        path = directory / meta["file"]
+        if not path.exists():
+            raise CheckpointCorruptError(
+                f"{directory}: blob {meta['file']!r} (leaf {name!r}) is "
+                "missing")
+        if "nbytes" in meta and path.stat().st_size != meta["nbytes"]:
+            raise CheckpointCorruptError(
+                f"{directory}: blob {meta['file']!r} is truncated/resized "
+                f"({path.stat().st_size} bytes, manifest records "
+                f"{meta['nbytes']})")
+        if "crc32" in meta and _crc32(path) != meta["crc32"]:
+            raise CheckpointCorruptError(
+                f"{directory}: blob {meta['file']!r} failed its CRC32 "
+                "check (bit corruption)")
+        try:
+            arr = np.load(path)
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"{directory}: blob {meta['file']!r} is not a readable "
+                f".npy file ({type(e).__name__}: {e})") from e
+        if (list(arr.shape) != list(meta["shape"])
+                or str(arr.dtype) != meta["dtype"]):
+            raise CheckpointCorruptError(
+                f"{directory}: blob {meta['file']!r} decodes to "
+                f"{arr.dtype}{arr.shape}, manifest records "
+                f"{meta['dtype']}{tuple(meta['shape'])} — stale manifest "
+                "or swapped blob")
+        flat[name] = arr
+    return flat
+
+
+def read_manifest(path: pathlib.Path, *,
+                  expect_format: str | None = None) -> dict:
+    """Read + sanity-check a manifest.json; integrity failures raise
+    ``CheckpointCorruptError`` (missing file, bad JSON, future schema,
+    wrong format tag)."""
+    if not path.exists():
+        raise CheckpointCorruptError(f"{path.parent}: manifest.json missing")
+    try:
+        man = json.loads(path.read_text())
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruptError(
+            f"{path.parent}: manifest.json unreadable "
+            f"({type(e).__name__}: {e})") from e
+    schema = man.get("schema", 1)
+    if not isinstance(schema, int) or schema > SCHEMA_VERSION:
+        raise CheckpointCorruptError(
+            f"{path.parent}: manifest schema {schema!r} is newer than this "
+            f"reader ({SCHEMA_VERSION}) — refusing to guess")
+    if expect_format is not None and man.get("format", expect_format) \
+            != expect_format:
+        raise CheckpointCorruptError(
+            f"{path.parent}: manifest format {man.get('format')!r} != "
+            f"expected {expect_format!r}")
+    if not isinstance(man.get("leaves"), dict):
+        raise CheckpointCorruptError(
+            f"{path.parent}: manifest has no 'leaves' table")
+    return man
 
 
 class CheckpointManager:
@@ -93,14 +218,8 @@ class CheckpointManager:
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir()
-        manifest = {"step": step, "metric": metric, "extra": extra,
-                    "leaves": {}}
-        for name, arr in flat.items():
-            fname = name.replace("/", "__") + ".npy"
-            np.save(tmp / fname, arr)
-            manifest["leaves"][name] = {
-                "file": fname, "shape": list(arr.shape),
-                "dtype": str(arr.dtype)}
+        manifest = {"schema": SCHEMA_VERSION, "step": step, "metric": metric,
+                    "extra": extra, "leaves": save_blobs(tmp, flat)}
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         if final.exists():
             shutil.rmtree(final)
@@ -125,8 +244,35 @@ class CheckpointManager:
         return s[-1] if s else None
 
     def manifest(self, step: int) -> dict:
-        return json.loads(
-            (self.dir / f"step_{step:08d}" / "manifest.json").read_text())
+        return read_manifest(
+            self.dir / f"step_{step:08d}" / "manifest.json")
+
+    def verify(self, step: int) -> dict:
+        """Full integrity pass over one checkpoint WITHOUT unflattening.
+
+        Returns the manifest on success; raises ``CheckpointCorruptError``
+        naming the failed check otherwise. This is the generation-by-
+        generation fallback probe the warm-boot/resume paths run before
+        trusting a checkpoint.
+        """
+        man = self.manifest(step)
+        load_blobs(self.dir / f"step_{step:08d}", man["leaves"])
+        return man
+
+    def latest_valid_step(self) -> int | None:
+        """Newest step that passes ``verify`` — the resume entry point.
+
+        Corrupt generations are skipped (newest first), never raised on:
+        a half-written or bit-flipped checkpoint costs one generation of
+        progress, not the run.
+        """
+        for step in reversed(self.steps()):
+            try:
+                self.verify(step)
+                return step
+            except CheckpointCorruptError:
+                continue
+        return None
 
     def restore(self, step: int, template: PyTree,
                 shardings: PyTree | None = None) -> PyTree:
@@ -134,11 +280,12 @@ class CheckpointManager:
 
         ``shardings`` may target a DIFFERENT mesh than the one the
         checkpoint was saved under — this is the elastic-restart path.
+        Integrity failures raise ``CheckpointCorruptError`` before any
+        array is materialized.
         """
         d = self.dir / f"step_{step:08d}"
         man = self.manifest(step)
-        flat = {name: np.load(d / meta["file"])
-                for name, meta in man["leaves"].items()}
+        flat = load_blobs(d, man["leaves"])
         tree = _unflatten_like(template, flat)
         if shardings is not None:
             tree = jax.tree.map(jax.device_put, tree, shardings)

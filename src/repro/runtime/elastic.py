@@ -23,7 +23,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.models.config import ModelConfig
-from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.checkpoint import CheckpointCorruptError, CheckpointManager
 from repro.sharding import partition
 
 
@@ -62,10 +62,18 @@ def resume(cfg: ModelConfig, manager: CheckpointManager, template: Any,
     dp = mesh.shape["data"]
     specs = partition.param_specs(cfg, mesh, template)
     shardings = partition.named(mesh, specs)
-    step = manager.latest_step()
+    # generation-by-generation fallback: a node that died mid-write (or a
+    # bit-flipped blob) costs one checkpoint, not the restart — the newest
+    # generation that passes the integrity verify wins (DESIGN.md §14).
+    step = manager.latest_valid_step()
     if step is None:
-        raise FileNotFoundError("no checkpoint to resume from")
-    tree = manager.restore(step, template, shardings)
+        raise FileNotFoundError("no valid checkpoint to resume from")
+    try:
+        tree = manager.restore(step, template, shardings)
+    except CheckpointCorruptError as e:  # pragma: no cover - verify raced
+        raise FileNotFoundError(
+            f"checkpoint step {step} corrupted between verify and restore: "
+            f"{e}") from e
     plan = ElasticPlan(mesh=mesh, dp_size=dp,
                        accum_steps=max(1, global_batch // max(dp, 1)
                                        // max(global_batch // dp, 1)))

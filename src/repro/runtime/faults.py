@@ -26,6 +26,24 @@ Sites are engine-defined strings (``"refresh"``, ``"freeze"``,
   overflow     the refresh freezes with a deliberately tiny lattice cap,
                forcing the capacity-overflow refusal the engine must
                recover from by re-freezing with grown capacity
+  kill         the probe terminates the PROCESS via ``os._exit`` — no
+               cleanup, no atexit, no flushing: a crash, as far as every
+               durability layer can tell. Probed at the persistence
+               sites (``"persist_before_publish"`` /
+               ``"persist_after_publish"`` around the atomic rename) by
+               the recovery harness (benchmarks/fig_recovery.py), which
+               restarts the process and asserts warm boot loses at most
+               one generation.
+
+Durability corruption (DESIGN.md §14) is injected on DISK rather than
+through a probe: ``corrupt_checkpoint(dir, kind)`` damages an
+already-published checkpoint/Predictor directory the way real storage
+does — ``truncate`` (partial write), ``bitflip`` (silent media
+corruption), ``missing_blob`` (lost file), ``stale_manifest`` (manifest
+and blobs out of sync). Every kind must be DETECTED at load by the
+integrity layer (runtime/checkpoint.py checksums + the
+``validate_predictor``/self-probe gate) — the corruption tests assert a
+damaged generation is rejected and never served.
 
 Every fired event is appended to ``injector.fired`` so benchmarks can
 report the schedule actually exercised. The injector is thread-safe: the
@@ -35,6 +53,9 @@ worker thread.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import pathlib
 import threading
 import time
 
@@ -148,6 +169,18 @@ class FaultInjector:
         ev = self.take(site, "overflow")
         return None if ev is None else ev.cap
 
+    def kill_if_armed(self, site: str) -> None:
+        """Terminate the process like a crash (``os._exit``) if armed.
+
+        ``os._exit`` skips every Python-level cleanup — daemon threads,
+        atexit, buffered writes — which is exactly what a SIGKILL/power
+        loss looks like to the durability layer. Exit code 17 marks the
+        death as scripted so the recovery harness can tell an injected
+        kill from a genuine crash.
+        """
+        if self.take(site, "kill") is not None:
+            os._exit(17)
+
     # -- reporting ----------------------------------------------------------
 
     def summary(self) -> list[dict]:
@@ -155,3 +188,64 @@ class FaultInjector:
         with self._lock:
             return [{"site": ev.site, "kind": ev.kind, "at": ev.at,
                      "note": ev.note} for ev in self.fired]
+
+
+# -- on-disk durability faults (no probe: damage published state) -----------
+
+CORRUPTION_KINDS = ("truncate", "bitflip", "missing_blob", "stale_manifest")
+
+
+def corrupt_checkpoint(directory: str | pathlib.Path, kind: str,
+                       *, blob_index: int = 0) -> str:
+    """Damage a published checkpoint/Predictor directory like storage does.
+
+    ``directory`` is a blob+manifest directory (runtime/checkpoint.py's
+    ``step_*`` or gp/serve.py's Predictor layout). Returns a description
+    of what was damaged. Kinds:
+
+      truncate        cut the ``blob_index``-th .npy blob to half its
+                      bytes (a write that died mid-flight past the
+                      atomic-rename boundary, or a torn copy)
+      bitflip         flip one bit in the middle of a blob (silent media
+                      corruption — only the CRC can see it)
+      missing_blob    delete a blob the manifest still references
+      stale_manifest  rewrite the manifest to reference a blob file that
+                      does not exist (manifest and blobs out of sync —
+                      e.g. a restored-from-backup manifest over newer
+                      blobs)
+
+    Every kind must be detected at load (CheckpointCorruptError or the
+    Predictor validation gate) — the corruption tests and
+    benchmarks/fig_recovery.py assert detection, never silent serving.
+    """
+    directory = pathlib.Path(directory)
+    blobs = sorted(directory.glob("*.npy"))
+    if not blobs:
+        raise FileNotFoundError(f"{directory}: no .npy blobs to corrupt")
+    blob = blobs[blob_index % len(blobs)]
+    if kind == "truncate":
+        size = blob.stat().st_size
+        with open(blob, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+        return f"truncated {blob.name} {size} -> {max(size // 2, 1)} bytes"
+    if kind == "bitflip":
+        data = bytearray(blob.read_bytes())
+        pos = len(data) // 2
+        data[pos] ^= 0x10
+        blob.write_bytes(bytes(data))
+        return f"flipped bit 4 of byte {pos} in {blob.name}"
+    if kind == "missing_blob":
+        blob.unlink()
+        return f"deleted {blob.name}"
+    if kind == "stale_manifest":
+        mpath = directory / "manifest.json"
+        man = json.loads(mpath.read_text())
+        leaves = man.get("leaves", {})
+        if not leaves:
+            raise ValueError(f"{directory}: manifest has no leaves")
+        name = sorted(leaves)[blob_index % len(leaves)]
+        leaves[name] = dict(leaves[name], file="__gone__.npy")
+        mpath.write_text(json.dumps(man))
+        return f"manifest leaf {name!r} now references __gone__.npy"
+    raise ValueError(f"unknown corruption kind {kind!r}; "
+                     f"expected one of {CORRUPTION_KINDS}")

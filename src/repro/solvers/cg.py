@@ -39,6 +39,30 @@ def _identity_precond(v: Array) -> Array:
     return v
 
 
+def _seed_state(matvec: MatVec, b: Array,
+                x0: Array | None) -> tuple[Array, Array]:
+    """Initial (x, r) with warm-start hygiene (DESIGN.md §14).
+
+    Warm-start seeds come from durable state — a previous Predictor's
+    alpha, possibly restored from a checkpoint written under DIFFERENT
+    hyperparameters or data — so they are sanitized, never trusted:
+    non-finite entries are zeroed (one NaN would poison the whole Krylov
+    basis), and any column whose seed residual is WORSE than the zero
+    start (``||b - A x0|| > ||b||``) is reset to the cold start for that
+    column. A stale seed can therefore only help or be ignored; it can
+    never make the solve slower to converge than a cold one.
+    """
+    if x0 is None:
+        return jnp.zeros_like(b), b
+    x = jnp.where(jnp.isfinite(x0), x0, 0.0).astype(b.dtype)
+    r = b - matvec(x)
+    worse = (jnp.linalg.norm(r, axis=0)
+             > jnp.linalg.norm(b, axis=0))  # (k,) regressive seeds
+    x = jnp.where(worse[None, :], 0.0, x)
+    r = jnp.where(worse[None, :], b, r)
+    return x, r
+
+
 def cg(
     matvec: MatVec,
     b: Array,
@@ -83,8 +107,7 @@ def cg(
     n, k = b.shape
     dt = b.dtype
 
-    x = jnp.zeros_like(b) if x0 is None else x0
-    r = b - matvec(x) if x0 is not None else b
+    x, r = _seed_state(matvec, b, x0)
     z = minv(r)
     p = z
     rz = jnp.sum(r * z, axis=0)  # (k,)
@@ -150,6 +173,10 @@ def cg_while(
     soon as every column is done — the wall-clock win warm starting is
     for. Columns whose ``x0`` residual is already within ``tol`` start
     INACTIVE (zero iterations), so a perfect seed costs one matvec.
+    Seeds pass through ``_seed_state`` hygiene first: non-finite entries
+    are zeroed and regressive columns fall back to the cold start, so an
+    alpha restored from an old checkpoint (the warm-boot path) can only
+    help, never hurt.
 
     Same operator/stopping semantics as ``cg`` (identical iterates while
     active, same ``min_iters`` refinement floor for active columns); the
@@ -164,8 +191,7 @@ def cg_while(
     n, k = b.shape
     dt = b.dtype
 
-    x = jnp.zeros_like(b) if x0 is None else x0
-    r = b - matvec(x) if x0 is not None else b
+    x, r = _seed_state(matvec, b, x0)
     z = minv(r)
     p = z
     rz = jnp.sum(r * z, axis=0)

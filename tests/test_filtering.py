@@ -390,6 +390,28 @@ def test_estimate_m_exact_on_full_sample(rng):
     assert estimate_m(z, 1.0, sample=400) == int(lat.m)
 
 
+def test_estimate_m_multiscale_no_severe_underestimate(rng):
+    """Regression for the 2-point estimator's multi-scale failure: tight
+    clusters saturate small subsamples, so the single average slope
+    underestimated m and the resulting cap paid a grow-and-retry
+    rebuild. The 3-point fit's monotonicity check (convex log-log growth
+    -> trust the tail slope) must keep the estimate near the true m."""
+    from repro.core.lattice import build_lattice_auto, estimate_m
+
+    n, d = 4000, 3
+    n_bg = n // 10  # sparse background carries most distinct vertices
+    z = np.concatenate([rng.normal(size=(n - n_bg, d)) * 0.05,
+                        rng.normal(size=(n_bg, d)) * 20.0])
+    z = jnp.asarray(z[rng.permutation(n)], jnp.float32)
+    m = int(build_lattice_auto(z, spacing=1.0, r=1).m)
+    assert estimate_m(z, 1.0, sample=512) >= 0.55 * m
+    assert estimate_m(z, 1.0, sample=1024) >= 0.8 * m
+    # ... without wrecking the uniform case with overestimates
+    z2 = jnp.asarray(rng.normal(size=(n, d)) * 3.0, jnp.float32)
+    m2 = int(build_lattice_auto(z2, spacing=1.0, r=1).m)
+    assert estimate_m(z2, 1.0, sample=512) <= 3.0 * m2
+
+
 def test_suggest_capacity_data_aware_tightens(rng):
     """The subsample-insert estimate right-sizes the cap on clustered
     data (where the constant-occupancy guess over-allocates heavily) and
