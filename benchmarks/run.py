@@ -13,9 +13,9 @@ import time
 import traceback
 
 from benchmarks import (fig4_mvm_error, fig6_mvm_speed, fig_build,
-                        fig_recovery, fig_scaling, fig_serve, fig_soak,
-                        fig_train_step, roofline_report, table2_uci,
-                        table3_sparsity, table4_cg)
+                        fig_recovery, fig_rollout, fig_scaling, fig_serve,
+                        fig_soak, fig_train_step, roofline_report,
+                        table2_uci, table3_sparsity, table4_cg)
 
 MODULES = {
     "fig4": fig4_mvm_error,
@@ -25,6 +25,7 @@ MODULES = {
     "fig_train": fig_train_step,
     "fig_scaling": fig_scaling,
     "fig_serve": fig_serve,
+    "fig_rollout": fig_rollout,
     "fig_soak": fig_soak,
     "fig_recovery": fig_recovery,
     "table4": table4_cg,

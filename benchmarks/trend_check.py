@@ -140,16 +140,49 @@ def _check_recovery(p):
         yield f"fig_recovery: cycle errors: {s['errors']}"
 
 
+def _check_rollout(p):
+    """The DESIGN.md §15 serving-gradient acceptance invariants."""
+    gc = p["gradcheck"]
+    if gc["max_rel_err"] > 1e-4:
+        yield (f"fig_rollout: gradcheck max rel-err "
+               f"{gc['max_rel_err']:.2e} > 1e-4 — the analytic "
+               "d(mean,var)/dx* no longer matches in-cell central "
+               "differences")
+    for d, row in gc["dims"].items():
+        if row["pairs"] < 32:
+            yield (f"fig_rollout: gradcheck d={d} kept only "
+                   f"{row['pairs']} same-cell FD pairs — the check is "
+                   "hollowed out")
+    if any(v != 0 for v in p["grad_collectives"].values()):
+        yield (f"fig_rollout: query-space gradient jaxpr has "
+               f"collectives: {p['grad_collectives']} — the "
+               "zero-collective gradient contract broke")
+    if not 0 <= p["rollout"]["worst_miss"] <= 1:
+        yield (f"fig_rollout: worst_miss {p['rollout']['worst_miss']} "
+               "outside [0, 1]")
+
+
+def _check_rollout_throughput(p):
+    row = p["rollout"]
+    if row["evals_per_s"] < 1e4:
+        yield (f"fig_rollout: {row['evals_per_s']:.0f} state-evals/s "
+               "below the 1e4 CPU floor for the 100-step MC rollout")
+    if row["grad_evals_per_s"] <= 0:
+        yield "fig_rollout: gradient rollout produced no throughput"
+
+
 ENFORCED = [
     ("BENCH_build.json", _check_build),
     ("BENCH_serve.json", _check_serve),
     ("BENCH_soak.json", _check_soak),
     ("BENCH_recovery.json", _check_recovery),
+    ("BENCH_rollout.json", _check_rollout),
 ]
 
 ADVISORY = [
     ("BENCH_mvm.json", _check_mvm),
     ("BENCH_train.json", _check_train),
+    ("BENCH_rollout.json", _check_rollout_throughput),
 ]
 
 

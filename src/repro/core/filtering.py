@@ -356,6 +356,68 @@ class LatticeCache:
         return lat
 
 
+def _embed_queries(zq: Array, spacing: float, dtype):
+    """Embed + pack + pack-overflow mask — the shared front half of every
+    frozen-slice entry point. Returns (q_packed, weights, rank, active);
+    ONE ``simplex_embed`` per call, which is what the multi-output predict
+    path's one-embed-per-batch pin (``lattice.embed_count``) counts."""
+    b, d = zq.shape
+    keys, w, rank = lat_mod.simplex_embed_ranked(zq, spacing)
+    q_packed = jnp.stack(
+        lat_mod._pack_key_cols(keys.reshape(b * (d + 1), d + 1)), axis=1)
+    # queries whose coordinates overflow the 16-bit packing could alias
+    # real keys — force all their vertices to miss (reported as mass 1)
+    ok = jnp.all(jnp.abs(keys) <= lat_mod._PACK_LIMIT, axis=(1, 2))
+    active = jnp.repeat(ok, d + 1)
+    return q_packed, w.astype(dtype), rank, active
+
+
+def _slice_only_xla(index: "lat_mod.LatticeIndex", tables: Array, zq: Array,
+                    spacing: float) -> tuple[Array, Array]:
+    """Pure-XLA frozen slice — every op is differentiable/transposable.
+
+    The body the custom JVP below traces: ``simplex_embed_ranked`` is
+    JVP-exact w.r.t. ``zq`` by construction (rounding and ranks are
+    piecewise constant with zero/stopped tangents; the weights are affine
+    per cell), and gather + einsum are linear in ``tables``/``weights``.
+    Keeping this path free of ``pallas_call`` (which has no transpose
+    rule) is what makes reverse-mode ``jax.grad`` work through serving.
+    """
+    from repro.kernels.slice.ref import slice_query_xla
+    q_packed, w, _, active = _embed_queries(zq, spacing, tables.dtype)
+    return slice_query_xla(index.tkeys, index.row_of_slot, tables,
+                           q_packed, w, active, index.hcap)
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(3, 4, 5))
+def _slice_only_prim(index, tables, zq, spacing, backend, interpret):
+    from repro.kernels.slice.ops import slice_query
+    q_packed, w, _, active = _embed_queries(zq, spacing, tables.dtype)
+    return slice_query(index, tables, q_packed, w, active,
+                       backend=backend, interpret=interpret)
+
+
+@_slice_only_prim.defjvp
+def _slice_only_jvp(spacing, backend, interpret, primals, tangents):
+    """Query-space (and table-space) JVP of the frozen slice (§15).
+
+    Differentiation re-traces the pure-XLA body — the weights are
+    piecewise-linear in the query, so the tangent is the existing slice
+    contraction against the analytic weight derivative (no new probes),
+    and linearizing this rule gives reverse-mode for free. The fast
+    serving tiers (Pallas fused probe) stay primal-only; forward-only
+    consumers that want the fused primal+tangent kernel use
+    ``slice_only_tangent`` instead. The index tangent (int leaves) is
+    ignored; ``miss`` gets the traced body's true tangent (zero when the
+    query's simplex fully hits, the tangent weight mass on the missing
+    vertices otherwise — see the boundary semantics in DESIGN.md §15).
+    """
+    index, tables, zq = primals
+    _, tables_dot, zq_dot = tangents
+    return jax.jvp(lambda t, q: _slice_only_xla(index, t, q, spacing),
+                   (tables, zq), (tables_dot, zq_dot))
+
+
 def slice_only(index: "lat_mod.LatticeIndex", tables: Array, zq: Array, *,
                spacing: float, backend: str = "auto",
                interpret: bool | None = None) -> tuple[Array, Array]:
@@ -372,18 +434,55 @@ def slice_only(index: "lat_mod.LatticeIndex", tables: Array, zq: Array, *,
     diagnostic (0 = the query's simplex is entirely inside the frozen
     lattice; 1 = completely off-lattice, prediction falls back to the
     prior). ``backend`` selects the kernels/slice/ops.py tier.
+
+    DIFFERENTIABLE in ``zq`` and ``tables`` (DESIGN.md §15): a custom JVP
+    reuses the piecewise-linearity of the barycentric weights, so both
+    ``jax.jvp`` and ``jax.grad`` flow through serving; gradients are only
+    meaningful where ``miss == 0`` (gate on it — absent vertices clamp
+    their mass's contribution to zero).
     """
-    from repro.kernels.slice.ops import slice_query
-    b, d = zq.shape
-    keys, w = lat_mod.simplex_embed(zq, spacing)
-    q_packed = jnp.stack(
-        lat_mod._pack_key_cols(keys.reshape(b * (d + 1), d + 1)), axis=1)
-    # queries whose coordinates overflow the 16-bit packing could alias
-    # real keys — force all their vertices to miss (reported as mass 1)
-    ok = jnp.all(jnp.abs(keys) <= lat_mod._PACK_LIMIT, axis=(1, 2))
-    active = jnp.repeat(ok, d + 1)
-    return slice_query(index, tables, q_packed, w.astype(tables.dtype),
-                       active, backend=backend, interpret=interpret)
+    return _slice_only_prim(index, tables, zq, float(spacing), backend,
+                            interpret)
+
+
+def slice_only_tangent(index: "lat_mod.LatticeIndex", tables: Array,
+                       zq: Array, zq_dot: Array, *, spacing: float,
+                       backend: str = "auto",
+                       interpret: bool | None = None
+                       ) -> tuple[Array, Array, Array]:
+    """Fused primal + directional query-space tangent of the frozen slice.
+
+    The forward-mode fast path (DESIGN.md §15): one embed, one analytic
+    weight tangent (``lattice.embed_weight_tangent``), then the fused
+    primal+tangent contraction tier (``kernels/slice/ops.py``'s
+    ``slice_query_tangent`` — Pallas on TPU, XLA elsewhere: probe once,
+    gather once, contract twice). Returns ``(out, out_dot, miss)``;
+    ``out_dot`` is d(out)/d(zq) . zq_dot, valid where ``miss == 0``.
+    """
+    from repro.kernels.slice.ops import slice_query_tangent
+    q_packed, w, rank, active = _embed_queries(zq, spacing, tables.dtype)
+    w_dot = lat_mod.embed_weight_tangent(rank, zq_dot, spacing)
+    return slice_query_tangent(index, tables, q_packed, w,
+                               w_dot.astype(tables.dtype), active,
+                               backend=backend, interpret=interpret)
+
+
+def slice_only_grad(index: "lat_mod.LatticeIndex", tables: Array,
+                    zq: Array, *, spacing: float
+                    ) -> tuple[Array, Array, Array]:
+    """One-pass primal + FULL query-space Jacobian of the frozen slice.
+
+    Returns ``(out (b, c), jac (b, c, d), miss (b,))`` with
+    ``jac[q, :, j] = d out[q] / d zq[q, j]`` — the d directional tangents
+    share one embed/probe/gather (``kernels/slice/ops.py``'s
+    ``slice_query_jacobian``). What ``gp/serve.predict_grad`` builds its
+    analytic d(mean, var)/dx* from; valid where ``miss == 0``.
+    """
+    from repro.kernels.slice.ops import slice_query_jacobian
+    q_packed, w, rank, active = _embed_queries(zq, spacing, tables.dtype)
+    wjac = lat_mod.embed_weight_jacobian(rank, spacing, w.dtype)
+    return slice_query_jacobian(index, tables, q_packed, w,
+                                wjac.astype(tables.dtype), active)
 
 
 def mvm_operator(z: Array, stencil: Stencil, *, cap: int | None = None,

@@ -87,36 +87,92 @@ def elevate(z: Array, spacing: float) -> Array:
     return jnp.concatenate([suffix_full[:, :1], elevated_rest], axis=1)
 
 
-def simplex_embed(z: Array, spacing: float):
-    """Find enclosing-simplex vertices + barycentric weights for each input.
+def descending_rank(diff: Array) -> Array:
+    """Stable descending rank of the rounding differential (the tie-break).
 
-    Vectorized port of the rounding algorithm of Adams et al. (2010) §3.
+    ``rank[i] = #{j : diff_j > diff_i} + #{j < i : diff_j == diff_i}`` — an
+    O(d^2)-per-point pairwise comparison count instead of an argsort.
+    Bit-identical to the stable argsort it replaces, but keeps the whole
+    embed (and hence the hash build and the frozen serving path,
+    DESIGN.md §12) free of `lax.sort`.
+
+    THE deterministic tie-break of the lattice (DESIGN.md §15): when a
+    query sits exactly on a simplex boundary, two or more differentials
+    tie and the enclosing simplex is ambiguous. Ties are broken
+    POSITIONALLY — among equal differentials the LOWER coordinate index
+    takes the smaller (earlier) rank — so every backend (XLA reference,
+    Pallas kernel, and the tangent/Jacobian helpers below) selects the
+    SAME cell and hence the same one-sided subgradient. The integer
+    lattice structure carries no gradient — stop_gradient keeps autodiff
+    (which differentiates the piecewise-linear barycentric weights) from
+    tracing through the comparisons.
+    """
+    d = diff.shape[1] - 1
+    nd_ = jax.lax.stop_gradient(diff)
+    pos = jnp.tril(jnp.ones((d + 1, d + 1), bool), k=-1)  # [a, b]: b < a
+    bigger = nd_[:, None, :] > nd_[:, :, None]  # [n, a, b]: diff_b > diff_a
+    ties = (nd_[:, None, :] == nd_[:, :, None]) & pos[None]
+    return jnp.sum(bigger | ties, axis=2).astype(jnp.int32)
+
+
+def _rank_scatter(rank: Array, vals: Array, affine: bool = False) -> Array:
+    """Scatter per-coordinate contributions into barycentric vertex order.
+
+    ``vals`` is (n, d+1[, ...]) in COORDINATE order; each coordinate i
+    contributes ``+vals[:, i]`` to canonical vertex ``d - rank[:, i]`` and
+    ``-vals[:, i]`` to vertex ``d + 1 - rank[:, i]``, with the overflow
+    column d+1 folded into vertex 0 (the rounding algorithm's telescoping
+    weight recurrence, vectorized). ``affine=True`` adds the constant 1 to
+    vertex 0 — the primal barycentric weights; without it the result is
+    the LINEAR part only, i.e. exactly the map tangents/Jacobians of the
+    weights flow through (DESIGN.md §15).
+    """
+    n, dp1 = rank.shape
+    d = dp1 - 1
+    out = jnp.zeros((n, d + 2) + vals.shape[2:], dtype=vals.dtype)
+    rows = jnp.arange(n)[:, None]
+    out = out.at[rows, d - rank].add(vals)
+    out = out.at[rows, d + 1 - rank].add(-vals)
+    fold = 1.0 + out[:, d + 1] if affine else out[:, d + 1]
+    out = out.at[:, 0].add(fold)
+    return out[:, : d + 1]
+
+
+# --- embed instrumentation ---------------------------------------------------
+# ``simplex_embed`` increments this on every Python-level call (trace-level
+# under jit) — the serving analogue of ``build_count()``. The multi-output
+# serving path (gp/serve.predict_multi) is pinned to ONE embed per query
+# batch regardless of the number of output channels (DESIGN.md §15).
+
+_EMBED_STATS = {"embeds": 0}
+
+
+def embed_count() -> int:
+    """Total ``simplex_embed`` invocations (trace-level under jit)."""
+    return _EMBED_STATS["embeds"]
+
+
+def simplex_embed_ranked(z: Array, spacing: float):
+    """``simplex_embed`` that also returns the coordinate ranks.
+
+    The ranks identify the enclosing simplex cell; the analytic weight
+    derivative helpers (``embed_weight_tangent``/``embed_weight_jacobian``)
+    consume them so gradient callers pay the embed ONCE and reuse its
+    scratch for the tangent scatter (DESIGN.md §15).
+
     Returns:
       keys:    (n, d+1, d+1) int32 — lattice coordinates of the d+1 vertices.
-      weights: (n, d+1) float32 — barycentric interpolation weights (sum to 1).
+      weights: (n, d+1) float32 — barycentric weights (sum to 1).
+      rank:    (n, d+1) int32 — fixed-up descending rank per coordinate.
     """
+    _EMBED_STATS["embeds"] += 1
     n, d = z.shape
     el = elevate(z, spacing)  # (n, d+1)
 
     # Round to the nearest remainder-0 point (multiples of d+1).
     v = el / (d + 1.0)
     rem0 = jnp.round(v) * (d + 1.0)  # (n, d+1) float
-    diff = el - rem0
-
-    # rank[i] = how many coords have a strictly larger differential, ties
-    # broken by position — the stable descending rank, computed as an
-    # O(d^2)-per-point pairwise comparison count instead of an argsort.
-    # Bit-identical to the stable argsort it replaces, but keeps the whole
-    # embed (and hence the hash build and the frozen serving path,
-    # DESIGN.md §12) free of `lax.sort`. The integer lattice structure
-    # carries no gradient — stop_gradient keeps autodiff (the beyond-paper
-    # grad_mode="autodiff" path, which differentiates the barycentric
-    # weights) from tracing through the comparisons.
-    nd_ = jax.lax.stop_gradient(diff)
-    pos = jnp.tril(jnp.ones((d + 1, d + 1), bool), k=-1)  # [a, b]: b < a
-    bigger = nd_[:, None, :] > nd_[:, :, None]  # [n, a, b]: diff_b > diff_a
-    ties = (nd_[:, None, :] == nd_[:, :, None]) & pos[None]
-    rank = jnp.sum(bigger | ties, axis=2).astype(jnp.int32)
+    rank = descending_rank(el - rem0)
 
     # Fix up so coordinates sum to zero on the lattice plane.
     coordsum = jnp.round(jnp.sum(rem0, axis=1) / (d + 1.0)).astype(jnp.int32)
@@ -128,12 +184,7 @@ def simplex_embed(z: Array, spacing: float):
 
     # Barycentric weights from the (fixed-up) differential, sorted by rank.
     delta = (el - rem0) / (d + 1.0)  # (n, d+1)
-    bary = jnp.zeros((n, d + 2), dtype=z.dtype)
-    rows = jnp.arange(n)[:, None]
-    bary = bary.at[rows, d - rank].add(delta)
-    bary = bary.at[rows, d + 1 - rank].add(-delta)
-    bary = bary.at[:, 0].add(1.0 + bary[:, d + 1])
-    weights = bary[:, : d + 1]  # (n, d+1); w_k for canonical vertex k
+    weights = _rank_scatter(rank, delta, affine=True)  # (n, d+1)
 
     # Vertex keys: rem0 + canonical_k[rank] with
     # canonical_k[r] = k - (d+1) * (r + k > d).
@@ -142,7 +193,54 @@ def simplex_embed(z: Array, spacing: float):
     rk = rank[:, None, :]  # (1 -> n, 1, d+1) coordinate ranks
     canon = k - (d + 1) * ((rk + k) > d).astype(jnp.int32)  # (n, d+1, d+1)
     keys = rem0_i[:, None, :] + canon
-    return keys, weights.astype(jnp.float32)
+    return keys, weights.astype(jnp.float32), rank
+
+
+def simplex_embed(z: Array, spacing: float):
+    """Find enclosing-simplex vertices + barycentric weights for each input.
+
+    Vectorized port of the rounding algorithm of Adams et al. (2010) §3.
+    Returns:
+      keys:    (n, d+1, d+1) int32 — lattice coordinates of the d+1 vertices.
+      weights: (n, d+1) float32 — barycentric interpolation weights (sum to 1).
+    """
+    keys, weights, _ = simplex_embed_ranked(z, spacing)
+    return keys, weights
+
+
+def embed_weight_tangent(rank: Array, z_dot: Array, spacing: float) -> Array:
+    """Directional derivative of the barycentric weights (DESIGN.md §15).
+
+    Within a simplex cell the weights are AFFINE in the query: the round
+    and the ranks are locally constant, so the tangent is just the linear
+    ``elevate`` of the direction pushed through the same rank scatter —
+    O(d^2) per point, no rounding, no probes. On a cell boundary this is
+    the one-sided derivative of the cell ``descending_rank`` selected.
+    Each row sums to zero (the weights always sum to 1).
+
+    Args: rank (n, d+1) from ``simplex_embed_ranked``; z_dot (n, d) the
+    input-space direction. Returns dw (n, d+1).
+    """
+    d = z_dot.shape[1]
+    ddelta = elevate(z_dot, spacing) / (d + 1.0)
+    return _rank_scatter(rank, ddelta)
+
+
+def embed_weight_jacobian(rank: Array, spacing: float,
+                          dtype=jnp.float32) -> Array:
+    """Full Jacobian dW/dz of the barycentric weights: (n, d+1, d).
+
+    ``embed_weight_tangent`` evaluated on the d basis directions at once:
+    the constant per-coordinate differential Jacobian ``d delta / d z``
+    (elevation is linear, so it is rank-independent) scattered per point
+    by the cell's ranks. Row k of each point's Jacobian is the gradient
+    of weight w_k; columns sum to zero over k.
+    """
+    n, dp1 = rank.shape
+    d = dp1 - 1
+    ej = elevate(jnp.eye(d, dtype=dtype), spacing)  # (d, d+1): row j = del/dz_j
+    dd = jnp.transpose(ej) / (d + 1.0)  # (d+1, d): dd[i, j] = ddelta_i/dz_j
+    return _rank_scatter(rank, jnp.broadcast_to(dd[None], (n, dp1, d)))
 
 
 @jax.tree_util.register_dataclass

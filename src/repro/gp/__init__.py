@@ -1,20 +1,24 @@
 """MVM-based GP inference built on the Simplex-GP operator."""
 from repro.gp.models import GPParams, SimplexGP, SimplexGPConfig
 from repro.gp.mll import MLLResult, mll_value_and_grad
-from repro.gp.predict import Posterior, cross_mvm, nll, posterior, rmse
-# NOTE: serve.predict is deliberately NOT re-exported here — the package
-# attribute ``repro.gp.predict`` must stay the submodule above, not a
-# function shadowing it. Serving call sites use
-# ``from repro.gp.serve import predict``.
-from repro.gp.serve import (Predictor, PredictorLoadError, ServeResult,
-                            ValidationReport, freeze, load_predictor,
-                            refreeze, save_predictor, self_probe,
-                            validate_predictor)
+from repro.gp.predict import (Posterior, cross_mvm, exact_mean_grad, nll,
+                              posterior, rmse)
+# NOTE: serve.predict / serve.predict_grad etc. are deliberately NOT
+# re-exported here — the package attribute ``repro.gp.predict`` must stay
+# the submodule above, not a function shadowing it. Serving call sites use
+# ``from repro.gp.serve import predict, predict_grad, ...``.
+from repro.gp.serve import (MultiPredictor, MultiServeResult, Predictor,
+                            PredictorLoadError, ServeGradResult, ServeResult,
+                            ValidationReport, freeze, freeze_multi,
+                            load_predictor, refreeze, save_predictor,
+                            self_probe, validate_predictor)
 from repro.gp.train import FitReport, TrainResult, fit
 
 __all__ = ["GPParams", "SimplexGP", "SimplexGPConfig", "MLLResult",
-           "mll_value_and_grad", "Posterior", "cross_mvm", "nll",
-           "posterior", "rmse", "FitReport", "TrainResult", "fit",
-           "Predictor", "PredictorLoadError", "ServeResult",
-           "ValidationReport", "freeze", "load_predictor", "refreeze",
-           "save_predictor", "self_probe", "validate_predictor"]
+           "mll_value_and_grad", "Posterior", "cross_mvm",
+           "exact_mean_grad", "nll", "posterior", "rmse", "FitReport",
+           "TrainResult", "fit", "MultiPredictor", "MultiServeResult",
+           "Predictor", "PredictorLoadError", "ServeGradResult",
+           "ServeResult", "ValidationReport", "freeze", "freeze_multi",
+           "load_predictor", "refreeze", "save_predictor", "self_probe",
+           "validate_predictor"]

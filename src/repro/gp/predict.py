@@ -180,6 +180,33 @@ def _posterior_rebuild(model: SimplexGP, params: GPParams, x: Array,
                      pack_overflow=op.lattice.pack_overflow)
 
 
+def exact_mean_grad(profile, x: Array, y: Array, xs: Array, *,
+                    lengthscale, outputscale, noise) -> Array:
+    """Analytic d(mean)/dx* of the DENSE exact GP — the gradient oracle.
+
+    The closed form the frozen serving gradients (gp/serve.predict_grad,
+    DESIGN.md §15) are validated against on in-model draws:
+
+      d mu(x*)/dx* = os * sum_i alpha_i k'(tau_i) * 2 (x* - x_i) / ls^2
+
+    with ``k' = profile.dk_dsq`` (dk/d tau^2, the same derivative profile
+    the paper's Eq. 11 hyperparameter gradients use — core/kernels_math)
+    and ``alpha = (K + noise I)^{-1} y`` from the same jittered system
+    ``core/exact.ExactGP`` solves. O(n* n d): test/benchmark-scale only.
+    """
+    from repro.core import kernels_math as km
+    d = x.shape[1]
+    ls = jnp.broadcast_to(jnp.asarray(lengthscale, x.dtype), (d,))
+    khat = km.gram(profile, x, x, ls, outputscale) \
+        + (noise + 1e-6) * jnp.eye(x.shape[0], dtype=x.dtype)
+    alpha = jnp.linalg.solve(khat, y)
+    zs, z = xs / ls[None, :], x / ls[None, :]
+    tau = jnp.sqrt(km.pairwise_sqdist(zs, z) + 1e-30)  # (n*, n)
+    kp = outputscale * profile.dk_dsq(tau)  # dk/d(tau^2) per pair
+    dsq = 2.0 * (zs[:, None, :] - z[None, :, :]) / ls[None, None, :]
+    return jnp.einsum("sn,n,snd->sd", kp, alpha, dsq)
+
+
 def nll(post: Posterior, noise: Array, y_true: Array) -> Array:
     """Mean predictive negative log-likelihood (Table 2's NLL column)."""
     s2 = post.var + noise

@@ -101,6 +101,31 @@ class ServeResult(NamedTuple):
     miss_mass: Array  # (b,) in [0, 1]: barycentric mass on absent vertices
 
 
+class ServeGradResult(NamedTuple):
+    """``predict_grad`` output: predictions + analytic query-space gradients.
+
+    ``grad_ok`` gates validity (DESIGN.md §15): a query with miss_mass > 0
+    has vertices clamped to the zero row, so its surrogate surface is
+    kinked by the frozen lattice's support boundary — the gradients are
+    still the exact gradients OF THE SERVED SURROGATE, but no longer
+    approximate the GP posterior's. Callers must gate on ``grad_ok``
+    rather than consume silently-degraded gradients.
+    """
+
+    mean: Array  # (b,) [or (b, k) from predict_multi_grad]
+    var: Array  # (b,) latent-f variance
+    dmean: Array  # (b, d) [or (b, k, d)] d mean / d x*
+    dvar: Array  # (b, d) [or (b, k, d)] d var / d x*
+    miss_mass: Array  # (b,) in [0, 1]
+    grad_ok: Array  # (b,) bool: miss_mass == 0 -> gradients trustworthy
+
+
+class MultiServeResult(NamedTuple):
+    mean: Array  # (b, k)
+    var: Array  # (b, k) latent-f variance per output channel
+    miss_mass: Array  # (b,) shared across channels (one embed, one probe)
+
+
 @functools.partial(jax.jit, static_argnames=("model", "variance_rank"))
 def _freeze_tables(model: SimplexGP, params: GPParams, lat, x: Array,
                    y: Array, key: Array, variance_rank: int,
@@ -149,6 +174,42 @@ def _freeze_tables(model: SimplexGP, params: GPParams, lat, x: Array,
     return os_ * blurred, u[:, 0], cg_info  # (cap+1, 1+k), (n,), info
 
 
+def _freeze_lattice(model: SimplexGP, params: GPParams, x: Array, *,
+                    cap: int | None, cache: LatticeCache | None):
+    """The one train-lattice build every freeze flavor shares.
+
+    ``freeze`` and ``freeze_multi`` MUST run the identical build branch:
+    the multi-output bit-exact-parity contract (DESIGN.md §15) holds
+    because each channel of ``freeze_multi`` reuses this lattice, which
+    is byte-identical to what k independent ``freeze`` calls would build
+    from the same (x, params, cap) — only built once.
+    """
+    cfg = model.config
+    st = model.stencil
+    ls, _, _ = model.constrained(params)
+    z = x / ls[None, :]
+    if cap is None and cache is None:
+        lat = lat_mod.build_lattice_auto(z, spacing=st.spacing, r=st.r,
+                                         backend=cfg.build_backend)
+    elif cache is not None:
+        n, d = x.shape
+        cap_val = model.capacity(n, d) if cap is None else cap
+        lat = cache.get(cache.point_set_tag(x), z, spacing=st.spacing,
+                        r=st.r, cap=cap_val, ls=ls,
+                        build_backend=cfg.build_backend)
+    else:
+        lat = lat_mod.build_lattice(z, spacing=st.spacing, r=st.r, cap=cap,
+                                    backend=cfg.build_backend)
+    if bool(lat.pack_overflow):
+        raise RuntimeError("freeze: lattice coordinate range overflow "
+                           "(|coord| > 2^15) — rescale inputs or bound "
+                           "the lengthscale")
+    if bool(lat.overflow):
+        raise RuntimeError("freeze: lattice capacity overflow — pass a "
+                           "larger cap (or let build_lattice_auto size it)")
+    return lat
+
+
 def freeze(model: SimplexGP, params: GPParams, x: Array, y: Array, *,
            key: Array, variance_rank: int = 30, cap: int | None = None,
            cache: LatticeCache | None = None,
@@ -173,30 +234,10 @@ def freeze(model: SimplexGP, params: GPParams, x: Array, y: Array, *,
     failed solve in the diagnostics (the ``validate_predictor`` gate
     refuses it at publication time); "raise" fails fast here.
     """
+    lat = _freeze_lattice(model, params, x, cap=cap, cache=cache)
+    ls, os_, noise = model.constrained(params)
     cfg = model.config
     st = model.stencil
-    ls, os_, noise = model.constrained(params)
-    z = x / ls[None, :]
-    if cap is None and cache is None:
-        lat = lat_mod.build_lattice_auto(z, spacing=st.spacing, r=st.r,
-                                         backend=cfg.build_backend)
-    elif cache is not None:
-        n, d = x.shape
-        cap_val = model.capacity(n, d) if cap is None else cap
-        lat = cache.get(cache.point_set_tag(x), z, spacing=st.spacing,
-                        r=st.r, cap=cap_val, ls=ls,
-                        build_backend=cfg.build_backend)
-    else:
-        lat = lat_mod.build_lattice(z, spacing=st.spacing, r=st.r, cap=cap,
-                                    backend=cfg.build_backend)
-    if bool(lat.pack_overflow):
-        raise RuntimeError("freeze: lattice coordinate range overflow "
-                           "(|coord| > 2^15) — rescale inputs or bound "
-                           "the lengthscale")
-    if bool(lat.overflow):
-        raise RuntimeError("freeze: lattice capacity overflow — pass a "
-                           "larger cap (or let build_lattice_auto size it)")
-
     x0 = None
     if warm_start is not None and warm_start.shape[0] == x.shape[0]:
         x0 = jnp.asarray(warm_start, x.dtype)[:, None]
@@ -288,6 +329,107 @@ def refreeze(model: SimplexGP, params: GPParams, x: Array, y: Array, *,
                   reuse_index=old.index, on_nonconverged=on_nonconverged)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MultiPredictor:
+    """Stacked multi-output frozen state: k channels, ONE lattice index.
+
+    The dynamics-model layout (DESIGN.md §15): all k outputs share the
+    input space, hyperparameters, and hence the lattice geometry, so one
+    hash index serves every channel and the per-channel value tables are
+    stacked column-wise into a single ``(m+1, k*(1+r))`` buffer —
+    channel j occupies the contiguous block ``[j*(1+r), (j+1)*(1+r))``,
+    column 0 of the block is its mean channel and the remaining r its
+    LOVE root. One embed + d+1 probes + one batched contraction serve
+    ALL k outputs per query (``predict_multi``). Per-channel solve
+    diagnostics ride along as (k,) vectors for the publication gate.
+    """
+
+    index: LatticeIndex
+    tables: Array  # (m+1, k*(1+r)) stacked per-channel [mean | root] blocks
+    lengthscale: Array  # (d,) shared across channels
+    outputscale: Array  # () shared
+    noise: Array  # () shared
+    alpha: Array  # (n, k) per-channel K_hat^{-1} y_j — refresh warm starts
+    cg_converged: Array  # (k,) bool per channel
+    cg_residual: Array  # (k,)
+    cg_iterations: Array  # (k,) int32
+    spacing: float = dataclasses.field(metadata=dict(static=True))
+    backend: str = dataclasses.field(default="auto",
+                                     metadata=dict(static=True))
+    buckets: tuple[int, ...] = dataclasses.field(
+        default=(64, 256, 1024, 4096), metadata=dict(static=True))
+    n_train: int = dataclasses.field(default=0, metadata=dict(static=True))
+    n_outputs: int = dataclasses.field(default=1,
+                                       metadata=dict(static=True))
+
+
+def freeze_multi(model: SimplexGP, params: GPParams, x: Array, ys: Array, *,
+                 key: Array, variance_rank: int = 30, cap: int | None = None,
+                 cache: LatticeCache | None = None,
+                 warm_start: Array | None = None,
+                 reuse_index: LatticeIndex | None = None,
+                 on_nonconverged: str = "flag") -> MultiPredictor:
+    """Freeze k output channels over ONE shared lattice (DESIGN.md §15).
+
+    ``ys`` is (n, k) — e.g. the per-state-dimension targets of a dynamics
+    model. All channels share (x, hyperparameters), so the lattice build,
+    overflow checks, and hash index are paid ONCE; each channel then runs
+    the same ``_freeze_tables`` solve an independent ``freeze`` would
+    (channel j is seeded with ``jax.random.split(key, k)[j]``), and the
+    compacted tables are stacked column-wise. The per-channel tables are
+    therefore BIT-EXACT equal to k independent ``freeze(model, params,
+    x, ys[:, j], key=split[j], cap=cap)`` calls — pinned by
+    tests/test_serve_grad.py. Batching the k CG solves into one block
+    solve would couple their stopping decisions and break that parity,
+    which is why the channels solve sequentially.
+
+    ``warm_start`` takes a previous MultiPredictor's (n, k) ``alpha``.
+    ``on_nonconverged="raise"`` fails if ANY channel's solve missed
+    tolerance; the default flags it in ``cg_converged`` for the gate.
+    """
+    if ys.ndim != 2:
+        raise ValueError(f"freeze_multi wants ys of shape (n, k); got "
+                         f"{ys.shape} — use freeze() for a single output")
+    k_out = ys.shape[1]
+    cfg = model.config
+    st = model.stencil
+    ls, os_, noise = model.constrained(params)
+    lat = _freeze_lattice(model, params, x, cap=cap, cache=cache)
+    chan_keys = jax.random.split(key, k_out)
+
+    warm = None
+    if warm_start is not None and warm_start.shape == (x.shape[0], k_out):
+        warm = jnp.asarray(warm_start, x.dtype)
+    blurred_list, alphas, infos = [], [], []
+    for j in range(k_out):
+        x0 = warm[:, j][:, None] if warm is not None else None
+        blurred, alpha, cg_info = _freeze_tables(
+            model, params, lat, x, ys[:, j], chan_keys[j], variance_rank,
+            x0)
+        blurred_list.append(blurred)
+        alphas.append(alpha)
+        infos.append(cg_info)
+    converged = [bool(jnp.all(i.converged)) for i in infos]
+    if not all(converged) and on_nonconverged == "raise":
+        bad = [j for j, c in enumerate(converged) if not c]
+        raise RuntimeError(
+            f"freeze_multi: alpha CG did not converge for channel(s) {bad} "
+            f"(tol {cfg.cg_tol_eval})")
+    index = _verified_index(lat, reuse_index)
+    tables = jnp.concatenate(
+        [lat_mod.compact_table(index, b) for b in blurred_list], axis=1)
+    return MultiPredictor(
+        index=index, tables=tables, lengthscale=ls, outputscale=os_,
+        noise=noise, alpha=jnp.stack(alphas, axis=1),
+        cg_converged=jnp.asarray(converged),
+        cg_residual=jnp.stack([jnp.max(i.residual_norms) for i in infos]),
+        cg_iterations=jnp.stack([i.iterations for i in infos]),
+        spacing=st.spacing, backend=cfg.serve_backend,
+        buckets=tuple(cfg.serve_buckets), n_train=x.shape[0],
+        n_outputs=k_out)
+
+
 class ValidationReport(NamedTuple):
     ok: bool
     failures: tuple[str, ...]
@@ -376,19 +518,19 @@ def bucket_size(b: int, buckets: tuple[int, ...], multiple: int = 1) -> int:
     return -(-nb // multiple) * multiple
 
 
-# jitted replicated-serving closures, keyed per (mesh, axis, backend) so
-# repeated batches reuse one compilation instead of re-wrapping shard_map
+# jitted replicated-serving closures, keyed per (core, mesh, axis, backend)
+# so repeated batches reuse one compilation instead of re-wrapping shard_map
 _SHARDED_CACHE: dict = {}
 
 
-def _sharded_predict_fn(mesh, axis_name: str, backend: str):
-    key = (mesh, axis_name, backend)
+def _sharded_predict_fn(mesh, axis_name: str, backend: str, core=None):
+    core = _predict_core if core is None else core
+    key = (core, mesh, axis_name, backend)
     fn = _SHARDED_CACHE.get(key)
     if fn is None:
         from repro.sharding.simplex import replicated_table_serve
         fn = replicated_table_serve(
-            functools.partial(_predict_core, backend=backend), mesh,
-            axis_name)
+            functools.partial(core, backend=backend), mesh, axis_name)
         _SHARDED_CACHE[key] = fn
     return fn
 
@@ -417,6 +559,144 @@ def predict(pred: Predictor, xs: Array, *, backend: str | None = None,
         mean, var, miss = _sharded_predict_fn(mesh, axis_name,
                                               backend)(pred, xs_pad)
     return ServeResult(mean=mean[:b], var=var[:b], miss_mass=miss[:b])
+
+
+# -- Multi-output serving (DESIGN.md §15) ------------------------------------
+
+
+def _predict_multi_core(mp: MultiPredictor, xs: Array, *, backend: str,
+                        interpret: bool | None = None):
+    """One embed + probe + batched contraction for ALL k channels.
+
+    The hoisted multi-channel path: the embed/rank scratch is computed
+    once per query batch inside the single ``slice_only`` call, not once
+    per output (pinned by the ``lattice.embed_count`` test) — the k
+    channels differ only in which table columns the one gathered row set
+    contracts against.
+    """
+    zq = xs / mp.lengthscale[None, :]
+    out, miss = filtering.slice_only(mp.index, mp.tables, zq,
+                                     spacing=mp.spacing, backend=backend,
+                                     interpret=interpret)
+    out = out.reshape(xs.shape[0], mp.n_outputs, -1)
+    mean = out[:, :, 0]
+    var = mp.outputscale - jnp.sum(out[:, :, 1:] ** 2, axis=2)
+    var = jnp.clip(var, 1e-6, mp.outputscale)
+    return mean, var, miss
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _predict_multi_padded(mp: MultiPredictor, xs: Array, backend: str):
+    return _predict_multi_core(mp, xs, backend=backend)
+
+
+def predict_multi(mp: MultiPredictor, xs: Array, *,
+                  backend: str | None = None, mesh=None,
+                  axis_name: str = "data") -> MultiServeResult:
+    """Serve all k output channels of one query batch from one probe.
+
+    Same bucketing/mesh contract as ``predict``; returns (b, k) mean and
+    latent variance plus the shared per-query ``miss_mass`` (the channels
+    share the lattice, so they miss together). Differentiable in ``xs``
+    (the ``slice_only`` custom JVP) — a PILCO-style rollout can
+    ``jax.grad`` straight through it; see also ``predict_multi_grad`` for
+    the one-pass analytic Jacobian.
+    """
+    b, d = xs.shape
+    backend = mp.backend if backend is None else backend
+    ndev = int(mesh.shape[axis_name]) if mesh is not None else 1
+    nb = bucket_size(b, mp.buckets, multiple=ndev)
+    xs_pad = jnp.zeros((nb, d), xs.dtype).at[:b].set(xs)
+    if mesh is None:
+        mean, var, miss = _predict_multi_padded(mp, xs_pad, backend)
+    else:
+        mean, var, miss = _sharded_predict_fn(
+            mesh, axis_name, backend, core=_predict_multi_core)(mp, xs_pad)
+    return MultiServeResult(mean=mean[:b], var=var[:b], miss_mass=miss[:b])
+
+
+# -- Analytic query-space gradients (DESIGN.md §15) --------------------------
+
+
+def _grad_blocks(index: LatticeIndex, tables: Array, xs: Array, ls: Array,
+                 os_: Array, spacing: float, k_out: int):
+    """Shared analytic d(mean, var)/dx* core for 1 and k output channels.
+
+    One ``slice_only_grad`` pass (embed + d+1 probes + one gather + d+1
+    contractions) yields the primal AND the full query-space Jacobian of
+    every table channel; the chain rule through zq = x/ls and the
+    variance's quadratic form are applied here. Where the variance clip
+    is active (var_raw outside [1e-6, outputscale] — off-model queries)
+    the reported dvar is 0, the true subgradient of the clipped surface.
+    """
+    zq = xs / ls[None, :]
+    out, jac, miss = filtering.slice_only_grad(index, tables, zq,
+                                               spacing=spacing)
+    b = xs.shape[0]
+    out = out.reshape(b, k_out, -1)
+    jac = (jac / ls[None, None, :]).reshape(b, k_out, out.shape[2],
+                                            ls.shape[0])
+    mean = out[:, :, 0]
+    dmean = jac[:, :, 0, :]
+    roots = out[:, :, 1:]
+    var_raw = os_ - jnp.sum(roots ** 2, axis=2)
+    dvar = -2.0 * jnp.einsum("bkr,bkrj->bkj", roots, jac[:, :, 1:, :])
+    clipped = (var_raw < 1e-6) | (var_raw > os_)
+    var = jnp.clip(var_raw, 1e-6, os_)
+    dvar = jnp.where(clipped[:, :, None], 0.0, dvar)
+    return mean, var, dmean, dvar, miss
+
+
+@jax.jit
+def _predict_grad_padded(pred: Predictor, xs: Array):
+    mean, var, dmean, dvar, miss = _grad_blocks(
+        pred.index, pred.tables, xs, pred.lengthscale, pred.outputscale,
+        pred.spacing, 1)
+    return mean[:, 0], var[:, 0], dmean[:, 0], dvar[:, 0], miss
+
+
+@jax.jit
+def _predict_multi_grad_padded(mp: MultiPredictor, xs: Array):
+    return _grad_blocks(mp.index, mp.tables, xs, mp.lengthscale,
+                        mp.outputscale, mp.spacing, mp.n_outputs)
+
+
+def predict_grad(pred: Predictor, xs: Array) -> ServeGradResult:
+    """Predictions + analytic d(mean, var)/dx* in one fused pass.
+
+    The forward-only fast path for gradient consumers (BO acquisition
+    ascent, rollout sensitivity): one embed, d+1 probes, one table
+    gather — the Jacobian contraction reuses the primal's gathered rows,
+    so the pair costs O(d^2 (1+r)) per query with NO extra probes and no
+    autodiff retrace. Equals ``jax.jacfwd`` of ``predict`` exactly
+    (tests/test_serve_grad.py); strictly-interior queries (miss 0, away
+    from cell boundaries) match central differences to f32 exactness
+    because mean is piecewise-linear and var piecewise-quadratic in x*.
+    Gate on ``grad_ok`` — see ``ServeGradResult``.
+    """
+    b, d = xs.shape
+    nb = bucket_size(b, pred.buckets)
+    xs_pad = jnp.zeros((nb, d), xs.dtype).at[:b].set(xs)
+    mean, var, dmean, dvar, miss = _predict_grad_padded(pred, xs_pad)
+    return ServeGradResult(mean=mean[:b], var=var[:b], dmean=dmean[:b],
+                           dvar=dvar[:b], miss_mass=miss[:b],
+                           grad_ok=miss[:b] <= 0.0)
+
+
+def predict_multi_grad(mp: MultiPredictor, xs: Array) -> ServeGradResult:
+    """``predict_grad`` over all k channels of a ``MultiPredictor``.
+
+    Returns (b, k) mean/var and (b, k, d) dmean/dvar from ONE
+    embed/probe/gather — the per-state-dimension Jacobian a dynamics
+    rollout consumes at each step.
+    """
+    b, d = xs.shape
+    nb = bucket_size(b, mp.buckets)
+    xs_pad = jnp.zeros((nb, d), xs.dtype).at[:b].set(xs)
+    mean, var, dmean, dvar, miss = _predict_multi_grad_padded(mp, xs_pad)
+    return ServeGradResult(mean=mean[:b], var=var[:b], dmean=dmean[:b],
+                           dvar=dvar[:b], miss_mass=miss[:b],
+                           grad_ok=miss[:b] <= 0.0)
 
 
 # -- Predictor persistence (DESIGN.md §14) -----------------------------------

@@ -21,8 +21,11 @@ from __future__ import annotations
 import jax
 
 from repro.core.lattice import LatticeIndex
-from repro.kernels.slice.kernel import slice_query_pallas
-from repro.kernels.slice.ref import slice_query_xla
+from repro.kernels.slice.kernel import (slice_query_pallas,
+                                        slice_query_tangent_pallas)
+from repro.kernels.slice.ref import (slice_query_jacobian_xla,
+                                     slice_query_tangent_xla,
+                                     slice_query_xla)
 
 Array = jax.Array
 
@@ -87,5 +90,52 @@ def slice_query(index: LatticeIndex, tables: Array, q_packed: Array,
                            q_packed, weights, active, index.hcap)
 
 
+def slice_query_tangent(index: LatticeIndex, tables: Array, q_packed: Array,
+                        weights: Array, weights_dot: Array, active: Array, *,
+                        backend: str = "auto",
+                        interpret: bool | None = None
+                        ) -> tuple[Array, Array, Array]:
+    """Primal + directional-tangent slice -> (out, out_dot, miss).
+
+    The query-space JVP of the frozen slice (DESIGN.md §15): the tables
+    and probed rows are constant along the tangent, so the JVP is the
+    SAME barycentric contraction against ``weights_dot`` (the directional
+    derivative of the weights, ``lattice.embed_weight_tangent``) — fused
+    with the primal so the pair costs one probe + one gather. Backend
+    policy is identical to ``slice_query``: the Pallas tier runs the
+    probe loop once and both contractions in-register; everywhere else
+    the XLA reference gathers once and einsums twice.
+    """
+    m1, c = tables.shape
+    resolved = resolve_slice_backend(backend, hcap=index.hcap,
+                                     npk=index.tkeys.shape[1], m1=m1, c=c)
+    if resolved == "slice_pallas":
+        run_interp = interpret if interpret is not None else False
+        if _on_tpu() or run_interp:
+            return slice_query_tangent_pallas(
+                index.tkeys, index.row_of_slot, tables, q_packed, weights,
+                weights_dot, active, interpret=run_interp)
+    return slice_query_tangent_xla(index.tkeys, index.row_of_slot, tables,
+                                   q_packed, weights, weights_dot, active,
+                                   index.hcap)
+
+
+def slice_query_jacobian(index: LatticeIndex, tables: Array, q_packed: Array,
+                         weights: Array, wjac: Array, active: Array
+                         ) -> tuple[Array, Array, Array]:
+    """Primal + full query-space Jacobian -> (out, jac (b, c, d), miss).
+
+    The d-directional generalization of ``slice_query_tangent`` (one
+    probe, one gather, d+1 contractions); XLA-only — the serving
+    gradient consumers (gp/serve.predict_grad) run it on the host, and
+    its output is d+1 times the primal's so the VMEM-residency argument
+    for a fused kernel does not transfer.
+    """
+    return slice_query_jacobian_xla(index.tkeys, index.row_of_slot, tables,
+                                    q_packed, weights, wjac, active,
+                                    index.hcap)
+
+
 __all__ = ["SLICE_BACKENDS", "SERVE_BUDGET_BYTES", "choose_slice_backend",
-           "resolve_slice_backend", "frozen_vmem_bytes", "slice_query"]
+           "resolve_slice_backend", "frozen_vmem_bytes", "slice_query",
+           "slice_query_tangent", "slice_query_jacobian"]

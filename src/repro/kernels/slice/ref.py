@@ -58,3 +58,62 @@ def slice_query_xla(tkeys: Array, row_of_slot: Array, tables: Array,
     miss = jnp.clip(
         jnp.sum(weights * missed.astype(weights.dtype), axis=1), 0.0, 1.0)
     return out, miss
+
+
+def slice_query_tangent_xla(tkeys: Array, row_of_slot: Array, tables: Array,
+                            q_packed: Array, weights: Array,
+                            weights_dot: Array, active: Array,
+                            hcap: int) -> tuple[Array, Array, Array]:
+    """Fused primal + directional tangent slice (DESIGN.md §15).
+
+    The frozen tables are constants and the table rows are piecewise
+    constant in the query, so the query-space JVP of the slice is the
+    SAME contraction against the tangent weights: probe once, gather
+    once, contract twice. ``weights_dot`` is the (b, d+1) directional
+    derivative of the barycentric weights
+    (``lattice.embed_weight_tangent``); rows missing from the index sit
+    on the zero row m and contribute zero to both contractions — the
+    subgradient convention for off-lattice mass.
+
+    Returns (out (b, c), out_dot (b, c), miss (b,)).
+    """
+    b, dp1 = weights.shape
+    m = tables.shape[0] - 1
+    hres = hash_lookup_xla(tkeys, q_packed, active, hcap)
+    row = jnp.where(hres >= 0,
+                    jnp.take(row_of_slot, jnp.clip(hres, 0, hcap - 1)),
+                    m)
+    vals = jnp.take(tables, row, axis=0).reshape(b, dp1, -1)
+    out = jnp.einsum("bkc,bk->bc", vals, weights.astype(tables.dtype))
+    out_dot = jnp.einsum("bkc,bk->bc", vals, weights_dot.astype(tables.dtype))
+    missed = (row == m).reshape(b, dp1)
+    miss = jnp.clip(
+        jnp.sum(weights * missed.astype(weights.dtype), axis=1), 0.0, 1.0)
+    return out, out_dot, miss
+
+
+def slice_query_jacobian_xla(tkeys: Array, row_of_slot: Array, tables: Array,
+                             q_packed: Array, weights: Array, wjac: Array,
+                             active: Array,
+                             hcap: int) -> tuple[Array, Array, Array]:
+    """Primal + FULL query-space Jacobian slice in one probe.
+
+    ``wjac`` is the (b, d+1, d) barycentric-weight Jacobian
+    (``lattice.embed_weight_jacobian``); the d directional tangents share
+    the single gather: jac[b, c, j] = sum_k vals[b, k, c] wjac[b, k, j].
+    O(d^2 c) per query on top of the primal's O(d c) — still no solve, no
+    extra probes. Returns (out (b, c), jac (b, c, d), miss (b,)).
+    """
+    b, dp1 = weights.shape
+    m = tables.shape[0] - 1
+    hres = hash_lookup_xla(tkeys, q_packed, active, hcap)
+    row = jnp.where(hres >= 0,
+                    jnp.take(row_of_slot, jnp.clip(hres, 0, hcap - 1)),
+                    m)
+    vals = jnp.take(tables, row, axis=0).reshape(b, dp1, -1)
+    out = jnp.einsum("bkc,bk->bc", vals, weights.astype(tables.dtype))
+    jac = jnp.einsum("bkc,bkj->bcj", vals, wjac.astype(tables.dtype))
+    missed = (row == m).reshape(b, dp1)
+    miss = jnp.clip(
+        jnp.sum(weights * missed.astype(weights.dtype), axis=1), 0.0, 1.0)
+    return out, jac, miss

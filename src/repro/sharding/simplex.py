@@ -246,3 +246,32 @@ def collective_counts(fn, *args) -> dict[str, int]:
     """{primitive: count} over ``COLLECTIVE_PRIMITIVES`` for ``fn(*args)``."""
     jaxpr = jax.make_jaxpr(fn)(*args)
     return {p: count_primitive(jaxpr, p) for p in COLLECTIVE_PRIMITIVES}
+
+
+# ---------------------------------------------------------------------------
+# Gradient contract of replicated-table serving (DESIGN.md §15).
+# ---------------------------------------------------------------------------
+# The zero-collective serving contract EXTENDS to query-space gradients:
+# d(mean, var)/d(x*) of the frozen slice is, per query, the same local
+# probe + gather + contraction against analytic weight derivatives — no
+# cross-query term exists, so differentiating w.r.t. the SHARDED queries
+# introduces no communication. The only way a collective could appear is
+# a cotangent w.r.t. the REPLICATED frozen state (summing per-device
+# table cotangents needs a psum); serving gradients never request that —
+# the tables are frozen constants, so ``jax.grad(..., argnums=queries)``
+# partial-evaluates the table cotangent away. ``assert_zero_collectives``
+# pins this on the gradient jaxpr (tests/test_serve_grad.py and
+# benchmarks/fig_rollout.py both assert it).
+
+
+def assert_zero_collectives(fn, *args, what: str = "serving") -> None:
+    """Raise if ``fn(*args)`` would execute ANY collective primitive.
+
+    Traces (never runs) ``fn`` and counts ``COLLECTIVE_PRIMITIVES`` in
+    the jaxpr, recursively. Use on serving entry points and on their
+    gradient functions to enforce the zero-collective contracts above.
+    """
+    counts = {p: c for p, c in collective_counts(fn, *args).items() if c}
+    if counts:
+        raise AssertionError(
+            f"zero-collective {what} contract violated: found {counts}")

@@ -110,6 +110,27 @@ def test_serve_bench_smoke(rng):
 
 
 @pytest.mark.bench_smoke
+def test_rollout_bench_smoke():
+    """benchmarks/fig_rollout.py's measurement paths at tiny size: the
+    k=2 freeze_multi + jitted MC rollout runs and reports positive
+    throughput with a valid miss bound, the FD gradcheck meets the same
+    1e-4 band the trend check enforces, and the query-gradient jaxpr is
+    collective-free (the measure asserts it)."""
+    from benchmarks.fig_rollout import (measure_grad_collectives,
+                                        measure_gradcheck, measure_rollout)
+
+    row = measure_rollout(200, 32, 10, variance_rank=4, iters=1)
+    assert row["k"] == 2 and row["m"] > 0
+    assert row["evals_per_s"] > 0 and row["grad_evals_per_s"] > 0
+    assert 0.0 <= row["worst_miss"] <= 1.0
+    gc = measure_gradcheck(dims=(2,), n=200, variance_rank=4)
+    assert gc["max_rel_err"] <= 1e-4
+    assert gc["dims"]["2"]["pairs"] > 0
+    counts = measure_grad_collectives(n=150, variance_rank=4)
+    assert all(v == 0 for v in counts.values())
+
+
+@pytest.mark.bench_smoke
 def test_trend_check_runs_clean():
     """The CI trend gate parses every committed artifact and exits 0 (its
     fail-soft contract); a malformed BENCH_*.json fails here in tier-1
