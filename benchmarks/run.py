@@ -13,9 +13,10 @@ import time
 import traceback
 
 from benchmarks import (fig4_mvm_error, fig6_mvm_speed, fig_build,
-                        fig_recovery, fig_rollout, fig_scaling, fig_serve,
-                        fig_soak, fig_train_step, roofline_report,
-                        table2_uci, table3_sparsity, table4_cg)
+                        fig_elastic, fig_recovery, fig_rollout,
+                        fig_scaling, fig_serve, fig_soak, fig_train_step,
+                        roofline_report, table2_uci, table3_sparsity,
+                        table4_cg)
 
 MODULES = {
     "fig4": fig4_mvm_error,
@@ -28,6 +29,7 @@ MODULES = {
     "fig_rollout": fig_rollout,
     "fig_soak": fig_soak,
     "fig_recovery": fig_recovery,
+    "fig_elastic": fig_elastic,
     "table4": table4_cg,
     "table2": table2_uci,
     "roofline": roofline_report,

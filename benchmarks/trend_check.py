@@ -162,6 +162,37 @@ def _check_rollout(p):
                "outside [0, 1]")
 
 
+def _check_elastic(p):
+    """The DESIGN.md §16 elastic-training acceptance invariants."""
+    s = p["summary"]
+    if not s["all_faults_fired"]:
+        yield (f"fig_elastic: only {s['fired_faults']}/"
+               f"{s['scripted_faults']} scripted faults fired — the "
+               "schedule was not exercised")
+    if s["max_steps_lost"] > s["ckpt_every"]:
+        yield (f"fig_elastic: {s['max_steps_lost']} epochs lost to one "
+               f"event > ckpt_every={s['ckpt_every']} — the durable-"
+               "progress bound broke")
+    if not s["same_mesh_bitcompat"]:
+        yield ("fig_elastic: same-mesh kill+resume is no longer "
+               "bit-compatible with the uninterrupted run (PR 7 resume "
+               "guarantee broke under a mesh)")
+    if not s["regrow_ok"]:
+        yield ("fig_elastic: mesh regrow 4 -> 8 did not complete the "
+               "run")
+    if s["mll_rel_err"] > s["mll_fence"]:
+        yield (f"fig_elastic: final MLL drifted {s['mll_rel_err']} "
+               f"(rel) > fence {s['mll_fence']} across mesh resizes")
+    if s["kills"] < 3:
+        yield (f"fig_elastic: kill/shrink/regrow schedule not exercised "
+               f"(kills={s['kills']} < 3)")
+    if len(s["mesh_sizes"]) < 2:
+        yield (f"fig_elastic: only one mesh size exercised "
+               f"({s['mesh_sizes']})")
+    if s["errors"]:
+        yield f"fig_elastic: life errors: {s['errors']}"
+
+
 def _check_rollout_throughput(p):
     row = p["rollout"]
     if row["evals_per_s"] < 1e4:
@@ -177,6 +208,7 @@ ENFORCED = [
     ("BENCH_soak.json", _check_soak),
     ("BENCH_recovery.json", _check_recovery),
     ("BENCH_rollout.json", _check_rollout),
+    ("BENCH_elastic.json", _check_elastic),
 ]
 
 ADVISORY = [

@@ -315,16 +315,21 @@ class LatticeCache:
 
     def get(self, tag, z: Array, *, spacing: float, r: int,
             cap: int | None, ls=None,
-            build_backend: str = "auto") -> Lattice:
+            build_backend: str = "auto", mesh=None) -> Lattice:
         """Return a cached lattice for this key, building on miss.
 
         ``tag`` identifies the point set(s) behind ``z`` (use
         ``point_set_tag``); ``ls`` is the concrete lengthscale the embedding
         divided by (traced -> bypass). The key also includes ``z``'s
         device/sharding layout so a sharded build never aliases an
-        unsharded one, and the build path (sort vs hash slot numbering
+        unsharded one, the build path (sort vs hash slot numbering
         differs, so lattices from different backends must never alias
-        either — consumers may hold slot-indexed state).
+        either — consumers may hold slot-indexed state), and the CONSUMER
+        MESH the MVMs will run on (``mesh``): after an elastic mesh
+        resize (DESIGN.md §16) a resumed run must never be served a
+        lattice produced for the old device layout — downstream holds
+        mesh-shaped compiled/sharded state keyed on these arrays, so the
+        resume path misses here and rebuilds.
         """
         ls_key = concrete_ls_key(ls) if ls is not None else ()
         if tag is None or ls_key is None or isinstance(z, jax.core.Tracer):
@@ -334,6 +339,7 @@ class LatticeCache:
         # run), so "auto" and its explicit resolution share one entry —
         # and the key matches the stored Lattice.build_backend provenance
         from repro.kernels.hash import ops as hash_ops
+        from repro.sharding.simplex import mesh_fingerprint
         n, d = z.shape
         cap_val = cap if cap is not None else lat_mod.default_capacity(n, d)
         resolved = hash_ops.resolve_build_backend(
@@ -341,7 +347,7 @@ class LatticeCache:
             npk=max(1, (d + 1) // 2))
         key = (tag, ls_key, float(spacing), int(r),
                None if cap is None else int(cap), self.layout_key(z),
-               resolved)
+               resolved, mesh_fingerprint(mesh))
         hit = self._store.get(key)
         if hit is not None:
             self._store.move_to_end(key)

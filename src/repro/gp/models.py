@@ -167,7 +167,7 @@ class SimplexGP:
             if cache is not None:
                 lat = cache.get(cache.point_set_tag(x), z,
                                 spacing=st.spacing, r=st.r, cap=cap, ls=ls,
-                                build_backend=cfg.build_backend)
+                                build_backend=cfg.build_backend, mesh=mesh)
             else:
                 lat = build_lattice(z, spacing=st.spacing, r=st.r, cap=cap,
                                     backend=cfg.build_backend)

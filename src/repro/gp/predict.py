@@ -48,7 +48,7 @@ class Posterior(NamedTuple):
 
 def _joint_lattice(model: SimplexGP, params: GPParams, x: Array, xs: Array,
                    *, cap: int | None,
-                   cache: LatticeCache | None) -> Lattice:
+                   cache: LatticeCache | None, mesh=None) -> Lattice:
     """Build (or fetch) the one lattice over the joint point set [x; xs]."""
     st = model.stencil
     ls, _, _ = model.constrained(params)
@@ -58,7 +58,7 @@ def _joint_lattice(model: SimplexGP, params: GPParams, x: Array, xs: Array,
     if cache is not None:
         return cache.get(cache.point_set_tag(x, xs), zj,
                          spacing=st.spacing, r=st.r, cap=cap, ls=ls,
-                         build_backend=model.config.build_backend)
+                         build_backend=model.config.build_backend, mesh=mesh)
     return build_lattice(zj, spacing=st.spacing, r=st.r, cap=cap,
                          backend=model.config.build_backend)
 
@@ -88,7 +88,8 @@ def cross_mvm(model: SimplexGP, params: GPParams, x: Array, xs: Array,
     _, os_, _ = model.constrained(params)
     n, ns = x.shape[0], xs.shape[0]
     if lat is None:
-        lat = _joint_lattice(model, params, x, xs, cap=None, cache=cache)
+        lat = _joint_lattice(model, params, x, xs, cap=None, cache=cache,
+                             mesh=mesh)
     vj = jnp.concatenate([v, jnp.zeros((ns, v.shape[1]), v.dtype)], axis=0)
     out = _joint_filter(model, lat, vj, x.dtype, mesh=mesh)
     return os_ * out[n:]
@@ -113,7 +114,8 @@ def posterior(model: SimplexGP, params: GPParams, x: Array, y: Array,
                                   variance_rank=variance_rank)
 
     ls, os_, noise = model.constrained(params)
-    lat = _joint_lattice(model, params, x, xs, cap=cap, cache=cache)
+    lat = _joint_lattice(model, params, x, xs, cap=cap, cache=cache,
+                         mesh=mesh)
 
     # K_hat MVM on the training block, through the shared joint lattice.
     def mvm(v: Array) -> Array:

@@ -46,6 +46,7 @@ from repro.gp import mll as mll_mod
 from repro.gp import predict as predict_mod
 from repro.gp.models import GPParams, SimplexGP
 from repro.optim import Adam
+from repro.runtime import faults as faults_mod
 from repro.runtime.checkpoint import CheckpointManager
 
 Array = jax.Array
@@ -64,6 +65,13 @@ class FitReport:
     # each rollback entry: {epoch, reason, restored_epoch, lr_scale,
     #                       jitter_raw} — the full escalation trail
     completed_epochs: int = 0
+    retries: list = dataclasses.field(default_factory=list)
+    # each retry entry: {epoch, error, remaining} — a transient in-step
+    # failure that was absorbed by re-running the step (DESIGN.md §16)
+    watchdog_breaches: list = dataclasses.field(default_factory=list)
+    # each breach entry: {epoch, deadline, seconds} — a slow/hung step
+    # that tripped the StepWatchdog; fit checkpoints immediately after
+    interrupted: str | None = None  # why the loop stopped early, if it did
 
 
 @dataclasses.dataclass
@@ -131,7 +139,9 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
         keep_last: int = 3, resume: bool = True,
         max_rollbacks: int = 3, spike_window: int = 8,
         spike_sigma: float = 10.0, lr_backoff: float = 0.5,
-        jitter_raw0: float = 0.1, faults=None) -> TrainResult:
+        jitter_raw0: float = 0.1, faults=None,
+        step_retries: int = 2, watchdog=None,
+        watchdog_abort: bool = False) -> TrainResult:
     """``mesh`` runs every solve/posterior MVM data-parallel over the
     mesh's "data" axis (DESIGN.md §10); n and n + n_val must divide the
     axis size. The lattice build and the surrogate gradients stay
@@ -150,6 +160,21 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
     ``max_rollbacks`` rollbacks it raises rather than looping. ``faults``
     (a ``runtime/faults.FaultInjector``) arms the scripted crash/
     divergence probes the recovery tests replay.
+
+    Elastic/failure semantics (DESIGN.md §16): a transient exception
+    raised INSIDE the jitted step (the ``"fit_step"`` fault site, or any
+    error ``runtime/faults.is_injected`` recognizes) is absorbed by
+    re-running the step — up to ``step_retries`` consecutive times per
+    epoch, each recorded in ``FitReport.retries`` — because the step is
+    a pure function of ``(params, opt_state, key)``: nothing was mutated
+    when it raised, so the retry replays the identical computation. A
+    ``watchdog`` (``runtime/straggler.StepWatchdog``) times every epoch;
+    a breach is recorded in ``FitReport.watchdog_breaches`` and forces
+    an immediate checkpoint (the epoch's result is still valid — slow is
+    not wrong), and with ``watchdog_abort=True`` the loop then returns
+    early with ``FitReport.interrupted = "watchdog_breach"`` so an
+    elastic supervisor (launch/elastic_gp.py) can re-shard onto a
+    surviving mesh and resume from that checkpoint.
     """
     d = x.shape[1]
     worst = default_capacity(*x.shape)
@@ -209,8 +234,19 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
     opt = make_opt(st.lr_scale)
 
     def make_step(cap, opt):
+        # the in-step fault probe is only traced in when an injector is
+        # armed: the production step (faults=None) compiles the identical
+        # program it always did, so the PR 7 bit-compatibility guarantee
+        # is untouched. The guarded variant takes a host-planned fault
+        # code as an operand and returns the callback's poison flag as an
+        # EXTRA OUTPUT (outputs cannot be dead-code-eliminated), leaving
+        # mll/params untouched — guarded and unguarded trajectories stay
+        # bit-identical. The callback only sleeps/echoes, never raises:
+        # raising from one device thread of a sharded program deadlocks
+        # the others in the collective (faults.exec_step_fault).
+        guarded = faults is not None
         @jax.jit
-        def step(params, opt_state, key):
+        def step(params, opt_state, key, fault_code=None):
             res = mll_mod.mll_value_and_grad(model, params, x, y, key,
                                              use_rrcg=use_rrcg, cap=cap,
                                              mesh=mesh)
@@ -218,8 +254,14 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
                 [jnp.all(jnp.isfinite(g))
                  for g in jax.tree.leaves(res.grads)]))
             new_params, new_state = opt.update(res.grads, opt_state, params)
-            return (new_params, new_state, res.mll, res.cg_iters,
-                    res.overflow, res.pack_overflow, grads_ok)
+            out = (new_params, new_state, res.mll, res.cg_iters,
+                   res.overflow, res.pack_overflow, grads_ok)
+            if guarded:
+                probe = jax.pure_callback(
+                    faults_mod.exec_step_fault,
+                    jax.ShapeDtypeStruct((), jnp.float32), fault_code)
+                out = out + (probe,)
+            return out
         return step
 
     def make_val(cap_val):
@@ -304,6 +346,7 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
     epoch = st.epoch + 1
     while epoch < epochs:
         if faults is not None:
+            faults.kill_if_armed("fit")  # scripted device loss (os._exit)
             faults.maybe_raise("fit")  # scripted crash (recovery tests)
             if faults.take("fit", "nan_params") is not None:
                 st.params = dataclasses.replace(
@@ -318,14 +361,65 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
                     st.params, raw_noise=st.params.raw_noise - 18.0)
         st.key, k1, k2 = jax.random.split(st.key, 3)
         t0 = time.perf_counter()
+        pre_breaches = 0 if watchdog is None else len(watchdog.breaches)
+        if watchdog is not None:
+            watchdog.start_step(epoch)
+        retries_left = step_retries
         while True:
-            new_params, new_state, mll, iters, ovf, povf, gok = step(
-                st.params, st.opt_state, k1)
+            try:
+                if faults is not None:
+                    # consume the in-step schedule ONCE per dispatch (a
+                    # retry is a new dispatch) and hand the decision to
+                    # the compiled step as an operand; block so the
+                    # injected sleep/poison has materialized before the
+                    # flag is inspected, then raise the scripted fault
+                    # HERE on the host — the callback itself never raises
+                    code = faults.plan_step("fit_step")
+                    out = jax.block_until_ready(
+                        step(st.params, st.opt_state, k1, code))
+                    *out, probe = out
+                    if float(probe) != 0.0:
+                        raise faults_mod.InjectedFault(
+                            "injected exception at 'fit_step'")
+                else:
+                    out = step(st.params, st.opt_state, k1)
+                new_params, new_state, mll, iters, ovf, povf, gok = out
+            except Exception as err:  # noqa: BLE001 — non-injected re-raised
+                if (retries_left > 0 and faults is not None
+                        and faults_mod.is_injected(err)):
+                    # the step's outputs are discarded on the poison path
+                    # and nothing host-side was mutated — re-running it is
+                    # safe and (fault aside) replays the identical
+                    # computation
+                    retries_left -= 1
+                    entry = dict(epoch=epoch,
+                                 error=str(err).splitlines()[0][:200],
+                                 remaining=retries_left)
+                    report.retries.append(entry)
+                    if log_fn:
+                        log_fn(f"transient step failure at epoch {epoch}: "
+                               f"retrying ({retries_left} retr"
+                               f"{'y' if retries_left == 1 else 'ies'} left)")
+                    continue
+                raise
             _check_pack(povf)
             if not bool(ovf) or st.cap >= worst:
                 break
             st.cap = min(st.cap * CAP_GROWTH, worst)  # stale grads: regrow
             step = make_step(st.cap, opt)
+        breached = False
+        if watchdog is not None:
+            step_seconds = time.perf_counter() - t0
+            watchdog.end_step(step_seconds)
+            breached = len(watchdog.breaches) > pre_breaches
+            if breached:
+                report.watchdog_breaches.append(dict(
+                    epoch=epoch, deadline=watchdog.breaches[-1][1],
+                    seconds=step_seconds))
+                if log_fn:
+                    log_fn(f"watchdog breach at epoch {epoch}: step took "
+                           f"{step_seconds:.2f}s (deadline "
+                           f"{watchdog.breaches[-1][1]:.2f}s)")
 
         # -- divergence guard (DESIGN.md §14) -------------------------------
         loss = float(-mll) if bool(jnp.isfinite(mll)) else float("nan")
@@ -368,8 +462,14 @@ def fit(model: SimplexGP, x: Array, y: Array, *, x_val: Array, y_val: Array,
         # detached from the loop's live references)
         good = jax.tree.map(jnp.asarray, st.arrays())
         good_meta = st.extra()
-        if (epoch + 1) % max(ckpt_every, 1) == 0:
+        if (epoch + 1) % max(ckpt_every, 1) == 0 or breached:
+            # a breach forces an immediate checkpoint: the slow epoch's
+            # result is valid (slow is not wrong), and if the mesh is
+            # about to shrink this is the state the resume picks up
             _checkpoint(rmse)
+        if breached and watchdog_abort:
+            report.interrupted = "watchdog_breach"
+            break
         if st.stall >= patience:
             break
         epoch += 1

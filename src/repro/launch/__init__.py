@@ -1,4 +1,5 @@
 # NOTE: do not import dryrun here — it sets XLA_FLAGS at import time.
+from repro.launch.elastic_gp import ElasticGPTrainer, ElasticRunReport
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.launch.serve_gp import (EngineConfig, GPServeEngine,
                                    HealthStatus, PredictorStore,
@@ -6,5 +7,6 @@ from repro.launch.serve_gp import (EngineConfig, GPServeEngine,
                                    ServeUnavailable)
 
 __all__ = ["make_debug_mesh", "make_production_mesh", "EngineConfig",
+           "ElasticGPTrainer", "ElasticRunReport",
            "GPServeEngine", "HealthStatus", "PredictorStore",
            "QueryResult", "RefreshRejected", "ServeUnavailable"]

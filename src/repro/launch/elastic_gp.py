@@ -1,0 +1,261 @@
+"""Elastic fault-tolerant GP training (DESIGN.md §16).
+
+Two layers, matching the two ways a sharded GP run dies:
+
+``ElasticGPTrainer``
+    The in-process supervisor. Runs ``gp/train.fit`` in segments over a
+    mesh built from the devices currently considered healthy. When a
+    segment is interrupted — a ``StepWatchdog`` breach (slow/hung step:
+    fit checkpoints the valid state and returns early) or an injected
+    crash (``runtime/faults.is_injected``: fit's last durable checkpoint
+    is the fallback) — the trainer picks a surviving data-axis size via
+    ``runtime/elastic.choose_mesh_shape(allow_uneven=True)``, rebuilds
+    the 1-D ``("data",)`` mesh over the remaining devices, and resumes
+    from the newest valid checkpoint. Ghost padding in
+    ``sharding/simplex.py`` means ANY device count works for ANY n, so
+    shrinking never has to round below the surviving count.
+
+``run_worker_segment`` / ``python -m repro.launch.elastic_gp --worker``
+    One training *process* life, for harnesses that simulate true device
+    loss: the driver (benchmarks/fig_elastic.py, tests/test_elastic.py)
+    kills the worker (``os._exit(17)`` via an armed ``kill`` fault) and
+    restarts it under a different ``--xla_force_host_platform_device_count``
+    — from the checkpoint layer's point of view exactly what losing half
+    the mesh looks like. The worker builds its problem deterministically
+    from the spec's seed, runs one resumable ``fit`` segment on all
+    visible devices, and prints a JSON report as its last stdout line
+    (the fig_recovery protocol).
+
+This module must stay import-light and must NOT set XLA_FLAGS at import
+time (the driver sets the device count in the child's environment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import sys
+from typing import Callable
+
+from repro.runtime import elastic
+from repro.runtime import faults as faults_mod
+from repro.runtime.straggler import StepWatchdog
+
+KILL_EXIT = 17  # runtime/faults.kill_if_armed's scripted exit code
+
+
+@dataclasses.dataclass
+class ElasticRunReport:
+    """What an elastic run survived, and what it produced."""
+
+    result: object  # gp/train.TrainResult of the final (completed) segment
+    events: list  # one entry per mesh change: {kind, devices, survivors}
+    device_counts: list  # data-axis size of every segment, in order
+    restarts: int
+
+
+class ElasticGPTrainer:
+    """Watchdog-driven elastic supervisor around ``gp/train.fit``.
+
+    ``faults`` is threaded into every segment: ``"fit"``/``"fit_step"``
+    site events fire inside the loop (transient retries are absorbed by
+    fit itself; crashes and watchdog breaches surface here and trigger a
+    mesh change). ``lost_per_event`` is the device-loss model: how many
+    devices a breach/crash is assumed to have taken with it.
+    """
+
+    def __init__(self, model, x, y, *, x_val, y_val, ckpt_dir: str,
+                 epochs: int = 40, ckpt_every: int = 5, lr: float = 0.1,
+                 seed: int = 0, faults=None, max_restarts: int = 6,
+                 lost_per_event: int | None = None,
+                 watchdog_window: int = 8, watchdog_multiplier: float = 3.0,
+                 watchdog_min_deadline: float = 10.0,
+                 log_fn: Callable[[str], None] | None = None):
+        self.model, self.x, self.y = model, x, y
+        self.x_val, self.y_val = x_val, y_val
+        self.ckpt_dir = ckpt_dir
+        self.epochs, self.ckpt_every = epochs, ckpt_every
+        self.lr, self.seed = lr, seed
+        self.faults = faults
+        self.max_restarts = max_restarts
+        self.lost_per_event = lost_per_event
+        self.watchdog_window = watchdog_window
+        self.watchdog_multiplier = watchdog_multiplier
+        self.watchdog_min_deadline = watchdog_min_deadline
+        self.log_fn = log_fn
+
+    def _survivors(self, devices: int) -> int:
+        """Data-axis size after an event took devices with it."""
+        lost = (self.lost_per_event if self.lost_per_event is not None
+                else max(1, devices // 2))
+        surviving = max(1, devices - lost)
+        dp, _ = elastic.choose_mesh_shape(
+            surviving, model_parallel=1, global_batch=self.x.shape[0],
+            prev_dp=devices, allow_uneven=True)
+        return dp
+
+    def run(self, device_count: int | None = None) -> ElasticRunReport:
+        import jax
+
+        from repro.gp import train as train_mod
+
+        devices = jax.devices()
+        k = min(device_count or len(devices), len(devices))
+        events, counts, restarts = [], [], 0
+        while True:
+            counts.append(k)
+            mesh = elastic.gp_mesh(devices[:k])
+            wd = StepWatchdog(window=self.watchdog_window,
+                              multiplier=self.watchdog_multiplier,
+                              min_deadline=self.watchdog_min_deadline)
+            if self.log_fn:
+                self.log_fn(f"elastic segment {len(counts)}: "
+                            f"{k} device(s), resume from "
+                            f"{self.ckpt_dir}")
+            try:
+                res = train_mod.fit(
+                    self.model, self.x, self.y,
+                    x_val=self.x_val, y_val=self.y_val,
+                    epochs=self.epochs, lr=self.lr, seed=self.seed,
+                    mesh=mesh, ckpt_dir=self.ckpt_dir,
+                    ckpt_every=self.ckpt_every, resume=True,
+                    faults=self.faults, watchdog=wd, watchdog_abort=True,
+                    log_fn=self.log_fn)
+            except Exception as err:  # noqa: BLE001 — non-injected re-raised
+                if (faults_mod.is_injected(err)
+                        and restarts < self.max_restarts):
+                    # scripted crash: the last durable checkpoint is the
+                    # fallback — resume=True picks it up next segment
+                    survivors = self._survivors(k)
+                    events.append(dict(
+                        kind="crash", devices=k, survivors=survivors,
+                        error=str(err).splitlines()[0][:200]))
+                    k = survivors
+                    restarts += 1
+                    continue
+                raise
+            if (res.report.interrupted == "watchdog_breach"
+                    and restarts < self.max_restarts):
+                # fit already checkpointed the slow-but-valid epoch; drop
+                # the straggler's devices and resume from that state
+                survivors = self._survivors(k)
+                events.append(dict(kind="watchdog_breach", devices=k,
+                                   survivors=survivors,
+                                   breaches=list(
+                                       res.report.watchdog_breaches)))
+                k = survivors
+                restarts += 1
+                continue
+            return ElasticRunReport(result=res, events=events,
+                                    device_counts=counts,
+                                    restarts=restarts)
+
+
+# -- subprocess worker (true device loss: the PROCESS is the casualty) -------
+
+def make_problem(seed: int, n: int, d: int, n_val: int):
+    """Deterministic synthetic regression problem shared by the elastic
+    tests and benchmarks — both sides of a kill/restart must rebuild the
+    identical data from the spec alone."""
+    import numpy as np
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = (jnp.sin(2 * x[:, 0]) + 0.4 * x[:, 1 % d]
+         + 0.05 * jnp.asarray(rng.normal(size=n), jnp.float32))
+    xv = jnp.asarray(rng.normal(size=(n_val, d)), jnp.float32)
+    yv = jnp.sin(2 * xv[:, 0]) + 0.4 * xv[:, 1 % d]
+    return x, y, xv, yv
+
+
+def params_digest(params) -> str:
+    """Order-stable byte digest of a GPParams pytree — the bit-compat
+    witness the same-mesh resume contract is asserted on."""
+    import jax
+    import numpy as np
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(params):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()
+
+
+def run_worker_segment(spec: dict) -> dict:
+    """One training-process life; returns the JSON-able segment report.
+
+    ``spec`` keys (all optional but ``ckpt_dir``):
+      seed/n/d/n_val      problem (rebuilt deterministically)
+      epochs/ckpt_every/lr  fit knobs (resume=True always)
+      patience            early-stop patience (default: never — the
+                          harness's steps-lost arithmetic needs lives of
+                          deterministic length)
+      kernel/max_cg_iters/num_probes  model config
+      devices             use only the first k visible devices (None=all)
+      faults              list of FaultEvent dicts to arm
+      watchdog            {window, multiplier, min_deadline} or None
+      watchdog_abort      return early on breach (default True)
+    """
+    import jax
+
+    from repro.gp import SimplexGP, SimplexGPConfig
+    from repro.gp import train as train_mod
+    from repro.runtime.faults import FaultInjector
+
+    seed = int(spec.get("seed", 0))
+    n, d = int(spec.get("n", 300)), int(spec.get("d", 2))
+    n_val = int(spec.get("n_val", 64))
+    x, y, xv, yv = make_problem(seed, n, d, n_val)
+    model = SimplexGP(SimplexGPConfig(
+        kernel=spec.get("kernel", "matern32"),
+        max_cg_iters=int(spec.get("max_cg_iters", 50)),
+        num_probes=int(spec.get("num_probes", 2))))
+
+    devices = jax.devices()
+    k = min(int(spec["devices"]), len(devices)) if spec.get("devices") \
+        else len(devices)
+    mesh = elastic.gp_mesh(devices[:k])
+
+    fi = None
+    if spec.get("faults"):
+        fi = FaultInjector()
+        for ev in spec["faults"]:
+            fi.arm(**ev)
+    wd = None
+    if spec.get("watchdog"):
+        wd = StepWatchdog(**{str(kk): vv
+                             for kk, vv in spec["watchdog"].items()})
+
+    res = train_mod.fit(
+        model, x, y, x_val=xv, y_val=yv,
+        epochs=int(spec.get("epochs", 20)), lr=float(spec.get("lr", 0.1)),
+        patience=int(spec.get("patience", 10 ** 9)),
+        seed=seed, mesh=mesh, ckpt_dir=spec["ckpt_dir"],
+        ckpt_every=int(spec.get("ckpt_every", 4)), resume=True,
+        faults=fi, watchdog=wd,
+        watchdog_abort=bool(spec.get("watchdog_abort", True)))
+    r = res.report
+    return {
+        "devices": k,
+        "visible_devices": len(devices),
+        "resumed_from_epoch": r.resumed_from_epoch,
+        "completed_epochs": r.completed_epochs,
+        "last_epoch": res.history[-1]["epoch"] if res.history else None,
+        "interrupted": r.interrupted,
+        "checkpoints_written": r.checkpoints_written,
+        "retries": list(r.retries),
+        "watchdog_breaches": list(r.watchdog_breaches),
+        "rollbacks": list(r.rollbacks),
+        "fired": fi.summary() if fi is not None else [],
+        "mll_history": [(h["epoch"], h["mll"]) for h in res.history],
+        "final_mll": res.history[-1]["mll"] if res.history else None,
+        "best_val_rmse": res.best_val_rmse,
+        "params_digest": params_digest(res.params),
+    }
+
+
+if __name__ == "__main__":
+    if len(sys.argv) >= 3 and sys.argv[1] == "--worker":
+        out = run_worker_segment(json.loads(sys.argv[2]))
+        print(json.dumps(out))  # last line: the report the driver parses
+    else:
+        raise SystemExit("usage: python -m repro.launch.elastic_gp "
+                         "--worker '<json spec>'")

@@ -35,12 +35,21 @@ class ElasticPlan:
 
 
 def choose_mesh_shape(num_devices: int, *, model_parallel: int,
-                      global_batch: int, prev_dp: int) -> tuple[int, int]:
-    """(data, accum): largest dp <= devices/model that divides batch."""
+                      global_batch: int, prev_dp: int,
+                      allow_uneven: bool = False) -> tuple[int, int]:
+    """(data, accum): largest dp <= devices/model that divides batch.
+
+    ``allow_uneven=True`` drops the divisibility walk and takes every
+    healthy device: consumers whose sharded kernels pad uneven rows
+    (the GP lattice MVM's ghost padding, sharding/simplex.py) don't need
+    the batch to divide the data axis, so shrinking 8 -> 5 devices keeps
+    all 5 instead of falling back to 4.
+    """
     assert num_devices % model_parallel == 0, (num_devices, model_parallel)
     dp = num_devices // model_parallel
-    while dp > 1 and global_batch % dp != 0:
-        dp -= 1
+    if not allow_uneven:
+        while dp > 1 and global_batch % dp != 0:
+            dp -= 1
     accum = max(1, prev_dp // dp)
     return dp, accum
 
@@ -78,3 +87,49 @@ def resume(cfg: ModelConfig, manager: CheckpointManager, template: Any,
                        accum_steps=max(1, global_batch // max(dp, 1)
                                        // max(global_batch // dp, 1)))
     return tree, step, plan
+
+
+# -- GP trainer elasticity (DESIGN.md §16) ----------------------------------
+
+def gp_mesh(devices=None) -> Mesh:
+    """1-D ``("data",)`` mesh over whatever devices remain.
+
+    The GP trainer has no model axis: every healthy device joins the data
+    axis (ghost padding in sharding/simplex.py absorbs uneven n), so the
+    surviving-mesh policy is simply "all of them".
+    """
+    devs = np.asarray(list(devices if devices is not None else jax.devices()))
+    return Mesh(devs, ("data",))
+
+
+def resume_gp(manager: CheckpointManager, template: Any,
+              devices=None) -> tuple[Any, int, dict, Mesh]:
+    """Restore the newest valid GP checkpoint onto the surviving mesh.
+
+    GP loop state — hyperparams, Adam moments, the rng key — is tiny and
+    logically REPLICATED: the data axis shards the per-point MVM operands
+    inside the step, never the checkpointed state. So mesh-shape
+    elasticity for the GP is a broadcast: restore the logical arrays and
+    ``device_put`` them fully-replicated onto the new mesh, whatever its
+    size (8 -> 4 -> 1 -> 8 all land bit-identical, asserted by the
+    hypothesis round-trip test). Returns ``(tree, step, extra, mesh)``
+    with ``extra`` the non-array loop state ``gp/train.fit`` saved.
+
+    Same newest-valid-generation fallback as ``resume``: a generation
+    that died mid-write costs one checkpoint, not the restart.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    mesh = gp_mesh(devices)
+    repl = NamedSharding(mesh, PartitionSpec())
+    shardings = jax.tree.map(lambda _: repl, template)
+    step = manager.latest_valid_step()
+    if step is None:
+        raise FileNotFoundError("no valid checkpoint to resume from")
+    try:
+        tree = manager.restore(step, template, shardings)
+    except CheckpointCorruptError as e:  # pragma: no cover - verify raced
+        raise FileNotFoundError(
+            f"checkpoint step {step} corrupted between verify and restore: "
+            f"{e}") from e
+    extra = dict(manager.manifest(step).get("extra", {}))
+    return tree, step, extra, mesh

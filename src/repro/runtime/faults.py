@@ -35,6 +35,25 @@ Sites are engine-defined strings (``"refresh"``, ``"freeze"``,
                restarts the process and asserts warm boot loses at most
                one generation.
 
+Training sites (DESIGN.md §16) reuse the same schedule: ``gp/train.fit``
+probes ``"fit"`` between steps (kill / nan_params / spike_params, PR 7)
+and — new here — ``"fit_step"`` *inside* the jitted step via the
+``plan_step``/``exec_step_fault`` pair: the host consumes the schedule
+once per step DISPATCH and passes the decision into the compiled step
+as a fault-code operand, where a ``jax.pure_callback`` sleeps (``slow``
+models a wedged collective — the whole step stalls on the straggling
+host callback) and echoes a poison flag back as a step OUTPUT; the host
+raises ``InjectedFault`` after ``block_until_ready`` when the flag is
+set, so a transient in-step ``exception`` surfaces as a retried event
+in ``FitReport``, not an abort. The callback itself NEVER raises: an
+exception thrown from a host callback on one device thread of a
+sharded program leaves the other threads parked in the collective —
+a real deadlock, observed, not hypothetical. Simulated device loss is not
+a probe at all: the elastic harness (launch/elastic_gp.py,
+benchmarks/fig_elastic.py) kills the training subprocess and restarts it
+with a smaller ``--xla_force_host_platform_device_count``, which is what
+losing devices looks like from the checkpoint layer's point of view.
+
 Durability corruption (DESIGN.md §14) is injected on DISK rather than
 through a probe: ``corrupt_checkpoint(dir, kind)`` damages an
 already-published checkpoint/Predictor directory the way real storage
@@ -62,6 +81,52 @@ import time
 
 class InjectedFault(RuntimeError):
     """Raised by an armed ``exception`` event (and nothing else)."""
+
+
+def is_injected(exc: BaseException | None) -> bool:
+    """True if ``exc`` is — or wraps — an ``InjectedFault``.
+
+    The in-step protocol raises ``InjectedFault`` directly on the host
+    (see ``FaultInjector.plan_step``), but any fault that does cross the
+    XLA boundary — e.g. a future callback-site failure — arrives wrapped
+    in the backend's runtime error (``XlaRuntimeError``), sometimes with
+    the original only present in the message text rather than the
+    ``__cause__`` chain. This walks both the cause/context chain and the
+    message so the trainer can distinguish a scripted transient (retry)
+    from a genuine failure (abort) regardless of how many layers XLA
+    wrapped it in.
+    """
+    seen: set[int] = set()
+    stack: list[BaseException | None] = [exc]
+    while stack:
+        e = stack.pop()
+        if e is None or id(e) in seen:
+            continue
+        seen.add(id(e))
+        if isinstance(e, InjectedFault):
+            return True
+        if "InjectedFault" in str(e) or "injected exception" in str(e):
+            return True
+        stack.extend((e.__cause__, e.__context__))
+    return False
+
+
+def exec_step_fault(code):
+    """Act on a ``plan_step`` fault code from inside a jitted step.
+
+    The ``jax.pure_callback`` body for the ``"fit_step"`` site: sleeps
+    ``code[0]`` seconds (a wedged collective — the compiled step cannot
+    complete until the callback returns) and echoes the poison flag
+    ``code[1]`` back as a float32 scalar the step returns as an output
+    (an output cannot be dead-code-eliminated, so the callback always
+    executes). Deliberately a pure function of its operand — no injector
+    state, no raising — so it is safe to run once per device thread.
+    """
+    import numpy as np
+    seconds = float(code[0])
+    if seconds > 0.0:
+        time.sleep(seconds)
+    return np.float32(code[1])
 
 
 @dataclasses.dataclass
@@ -168,6 +233,32 @@ class FaultInjector:
         """A deliberately undersized lattice cap for this freeze, or None."""
         ev = self.take(site, "overflow")
         return None if ev is None else ev.cap
+
+    def plan_step(self, site: str):
+        """Consume the in-step schedule for ONE step dispatch (host side).
+
+        Returns a float32 ``[sleep_seconds, poison]`` fault code the
+        caller passes INTO the jitted step as an operand, where
+        ``exec_step_fault`` acts on it from a ``jax.pure_callback``.
+        Consuming on dispatch (not inside the callback) keeps the
+        ``at`` arithmetic device-count-independent: XLA may run a host
+        callback once per participating device, and a retried step is a
+        new dispatch — one tick either way, same as the single-device
+        probe counting the tests pin.
+
+        A nonzero poison flag means an ``exception`` event is due; the
+        caller must raise ``InjectedFault`` on the HOST after
+        ``block_until_ready``, never from the callback — an exception
+        thrown from a host callback on one device thread of a sharded
+        program leaves the other threads parked in the collective
+        (deadlock), which is why the flag travels as a step output.
+        """
+        import numpy as np
+        ev_slow = self.take(site, "slow")
+        ev_exc = self.take(site, "exception")
+        return np.asarray([ev_slow.seconds if ev_slow is not None else 0.0,
+                           1.0 if ev_exc is not None else 0.0],
+                          dtype=np.float32)
 
     def kill_if_armed(self, site: str) -> None:
         """Terminate the process like a crash (``os._exit``) if armed.

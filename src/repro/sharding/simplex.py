@@ -66,15 +66,30 @@ def data_mesh(num_devices: int | None = None,
     return Mesh(np.array(devs), (axis_name,))
 
 
-def check_shardable(n: int, mesh: Mesh, axis_name: str) -> int:
-    """Points-per-device, or a clear error when n does not divide."""
+def shard_rows(n: int, mesh: Mesh, axis_name: str) -> tuple[int, int]:
+    """(rows per device, ghost rows) for n points on the axis — ANY n.
+
+    There is deliberately no divisibility requirement (the old hard error
+    was the "divisibility cliff"): ``sharded_lattice_mvm`` pads the three
+    per-point arrays with ``ghost`` zero-weight rows so every device gets
+    an equal shard. Ghost rows carry barycentric weight 0 and splat into
+    the trash row ``cap`` (which the blur zeroes anyway), so the masked
+    segment-sum is bit-equivalent to the unpadded operator on the real
+    rows — including n < axis size, where some devices hold only ghosts.
+    """
     ndev = int(mesh.shape[axis_name])
-    if n % ndev:
-        raise ValueError(
-            f"sharded lattice MVM needs n divisible by the '{axis_name}' "
-            f"axis size: n={n}, devices={ndev}. Pad or subset the point "
-            "set (the lattice build is global either way).")
-    return n // ndev
+    ghost = (-n) % ndev
+    return (n + ghost) // ndev, ghost
+
+
+def check_shardable(n: int, mesh: Mesh, axis_name: str) -> int:
+    """Points-per-device under ghost padding (kept for API compatibility).
+
+    Historically raised on indivisible n; since the elastic-training work
+    any n shards (zero-weight ghost rows make up the remainder), so this
+    now just reports the padded per-device row count.
+    """
+    return shard_rows(n, mesh, axis_name)[0]
 
 
 def sharded_lattice_mvm(lat: Lattice, v: Array, weights: Array | None = None,
@@ -88,6 +103,14 @@ def sharded_lattice_mvm(lat: Lattice, v: Array, weights: Array | None = None,
     backends (same linear operator; summation order differs only across
     device boundaries, so results agree to f32 accumulation noise).
     ``weights`` may be traced (the sharded path is pure XLA).
+
+    Any n shards: when n does not divide the axis size, the per-point
+    arrays are padded with GHOST rows — zero values, zero barycentric
+    weight, seg_id = the trash row ``cap``. A ghost contributes exactly
+    0.0 to the segment-sum of a row the blur zeroes regardless, so the
+    real rows' results are bit-identical to the pad-free layout (and for
+    divisible n no padding code runs at all). Padding happens outside
+    ``shard_map``, so the one-psum contract is untouched.
     """
     if weights is None:
         if taps is None:
@@ -97,12 +120,20 @@ def sharded_lattice_mvm(lat: Lattice, v: Array, weights: Array | None = None,
     if n != lat.n:
         raise ValueError(f"v has {n} rows but the lattice was built for "
                          f"{lat.n} points")
-    check_shardable(n, mesh, axis_name)
+    _, ghost = shard_rows(n, mesh, axis_name)
     d1 = lat.d + 1
     r = lat.r
     cap = lat.cap
     # (n, d+1) layout so the per-point leading axis is the sharded one.
     seg = lat.seg_ids.reshape(lat.n, d1)
+    bary = lat.weights
+    if ghost:
+        v = jnp.concatenate(
+            [v, jnp.zeros((ghost, c), v.dtype)], axis=0)
+        seg = jnp.concatenate(
+            [seg, jnp.full((ghost, d1), cap, seg.dtype)], axis=0)
+        bary = jnp.concatenate(
+            [bary, jnp.zeros((ghost, d1), bary.dtype)], axis=0)
 
     def local_mvm(v_loc, seg_loc, bw_loc, nbr, w):
         nl = v_loc.shape[0]
@@ -137,7 +168,27 @@ def sharded_lattice_mvm(lat: Lattice, v: Array, weights: Array | None = None,
         in_specs=(P(axis_name, None), P(axis_name, None),
                   P(axis_name, None), P(), P()),
         out_specs=P(axis_name, None))
-    return fn(v, seg, lat.weights, lat.nbr, weights.astype(v.dtype))
+    out = fn(v, seg, bary, lat.nbr, weights.astype(v.dtype))
+    return out[:n] if ghost else out
+
+
+def mesh_fingerprint(mesh) -> str:
+    """Hashable identity of a device mesh for cache keys (DESIGN.md §16).
+
+    Two meshes are interchangeable for a consumer holding mesh-dependent
+    compiled/sharded state ONLY if they have the same axis layout over the
+    same physical devices — so the fingerprint is (axis names/sizes, the
+    flattened device ids). ``None`` (no mesh — single-device execution)
+    fingerprints as "". ``LatticeCache`` folds this into its key so a
+    lattice produced for one mesh layout is NEVER served to an MVM running
+    on a different one after an elastic resize (8→4 must rebuild).
+    """
+    if mesh is None:
+        return ""
+    shape = tuple((str(name), int(size))
+                  for name, size in mesh.shape.items())
+    devs = tuple(int(d.id) for d in np.asarray(mesh.devices).reshape(-1))
+    return f"{shape}|{devs}"
 
 
 # NOTE: there is deliberately no sharded twin of ``filtering.mvm_operator``

@@ -58,16 +58,48 @@ def test_sharded_matches_single_device_one_dev_mesh(rng):
     assert err <= 1e-5
 
 
-def test_sharded_mvm_rejects_indivisible_n(rng):
-    st = make_stencil("matern32", 1)
-    z, v = _problem(rng, 7, 2, 1)
-    lat = lat_mod.build_lattice(z, spacing=st.spacing, r=st.r)
+def test_shard_rows_any_n():
+    """The divisibility cliff is gone: any n shards via ghost padding."""
 
     class _Mesh:
-        shape = {"data": 2}
+        shape = {"data": 8}
 
-    with pytest.raises(ValueError, match="divisible"):
-        sx.check_shardable(7, _Mesh(), "data")
+    m = _Mesh()
+    assert sx.shard_rows(16, m, "data") == (2, 0)
+    assert sx.shard_rows(7, m, "data") == (1, 1)  # n < axis size
+    assert sx.shard_rows(17, m, "data") == (3, 7)
+    assert sx.check_shardable(17, m, "data") == 3  # legacy alias: no raise
+
+
+@pytest.mark.parametrize("n", [7, 80, 81, 3])
+def test_padded_sharded_mvm_matches_fused(rng, n):
+    """Ghost-row padding: indivisible n (including n < axis size on the
+    8-dev subprocess run below; here the 1-dev mesh pins the pad==0
+    no-op) matches the single-device fused operator."""
+    st = make_stencil("rbf", 1)
+    z, v = _problem(rng, n, 2, 2)
+    lat = lat_mod.build_lattice(z, spacing=st.spacing, r=st.r)
+    w = jnp.asarray(st.weights, jnp.float32)
+    ref = lattice_mvm(lat, v, w, backend="fused_xla")
+    got = sx.sharded_lattice_mvm(lat, v, w, mesh=sx.data_mesh())
+    assert got.shape == ref.shape
+    err = float(jnp.linalg.norm(got - ref)
+                / max(float(jnp.linalg.norm(ref)), 1e-30))
+    assert err <= 1e-5
+
+
+def test_padded_sharded_mvm_one_psum(rng):
+    """Padding happens outside shard_map: the one-psum contract (and the
+    no-other-collective contract) hold for indivisible n too."""
+    st = make_stencil("matern32", 1)
+    z, v = _problem(rng, 37, 3, 2)
+    lat = lat_mod.build_lattice(z, spacing=st.spacing, r=st.r)
+    mesh = sx.data_mesh()
+    w = jnp.asarray(st.weights, jnp.float32)
+    counts = sx.collective_counts(
+        lambda vv: sx.sharded_lattice_mvm(lat, vv, w, mesh=mesh), v)
+    assert counts["psum"] == 1
+    assert all(c == 0 for p, c in counts.items() if p != "psum")
 
 
 SHARDED_MVM = textwrap.dedent("""
@@ -107,6 +139,52 @@ def test_sharded_mvm_8dev_matches_fused(multidevice_run):
     assert data["rel_err"] <= 1e-5
     assert data["psums"] == 1
     assert data["other"] == 0
+
+
+PADDED_MVM = textwrap.dedent("""
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import lattice as lat_mod
+    from repro.core.stencil import make_stencil
+    from repro.kernels.blur.ops import lattice_mvm
+    from repro.sharding import simplex as sx
+
+    rng = np.random.default_rng(1)
+    st = make_stencil("matern32", 1)
+    mesh = sx.data_mesh()
+    out = {"devices": jax.device_count(), "cases": {}}
+    # 1003 = 8*125+3 (real ghost rows); 5 < 8 (whole devices all-ghost)
+    for n in (1003, 5):
+        d, c = 3, 2
+        z = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+        lat = lat_mod.build_lattice_auto(z, spacing=st.spacing, r=st.r)
+        w = jnp.asarray(st.weights, jnp.float32)
+        ref = lattice_mvm(lat, v, w, backend="fused_xla")
+        got = jax.jit(lambda vv: sx.sharded_lattice_mvm(
+            lat, vv, w, mesh=mesh))(v)
+        counts = sx.collective_counts(
+            lambda vv: sx.sharded_lattice_mvm(lat, vv, w, mesh=mesh), v)
+        out["cases"][str(n)] = {
+            "shape_ok": got.shape == ref.shape,
+            "rel_err": float(jnp.linalg.norm(got - ref)
+                             / jnp.linalg.norm(ref)),
+            "psums": counts["psum"],
+            "other": sum(cc for kk, cc in counts.items() if kk != "psum")}
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.multidevice
+def test_padded_sharded_mvm_8dev(multidevice_run):
+    """Uneven-shard regression: n % 8 != 0 and n < 8 both serve the exact
+    operator on a REAL 8-device mesh with exactly one psum."""
+    data = multidevice_run(PADDED_MVM)
+    assert data["devices"] == 8
+    for n, row in data["cases"].items():
+        assert row["shape_ok"], n
+        assert row["rel_err"] <= 1e-5, (n, row)
+        assert row["psums"] == 1 and row["other"] == 0, (n, row)
 
 
 SHARDED_GP = textwrap.dedent("""
